@@ -1,0 +1,74 @@
+"""Fig. 8 — ablation: each ConServe optimization enabled incrementally.
+
+vLLM++ -> +preemptive SLO-aware scheduler -> +incremental checkpointing ->
++background prefetch.  Paper: the scheduler first CUTS P99 TTFT by ~71% at
+an offline-throughput cost; IC recovers ~14% and prefetch ~13.6% of it."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.serving import loadgen
+
+from . import common
+
+STAGES = {
+    # (sched overrides, eng overrides)
+    "vllm++": (
+        dict(slo_aware=False, preempt_running=False, swap_on_preempt=True,
+             max_batch_seqs=2048),
+        dict(enable_checkpointing=False, enable_background_prefetch=False,
+             enable_safepoints=False),
+    ),
+    "+slo_sched": (
+        dict(swap_on_preempt=True),
+        dict(enable_checkpointing=False, enable_background_prefetch=False),
+    ),
+    "+incr_ckpt": (
+        dict(swap_on_preempt=True),
+        dict(enable_background_prefetch=False),
+    ),
+    "+prefetch": (dict(), dict()),
+}
+
+
+def main(duration: float = 300.0) -> list:
+    rng_seed = 0
+    rows = []
+    results = {}
+    for name, (sched, eng) in STAGES.items():
+        e = common.conserve(sched=sched, eng=eng)
+        rng = np.random.default_rng(rng_seed)
+        times = loadgen.gamma_arrivals(2.0, 1.0, duration, rng)
+        e.submit(loadgen.make_online_requests(
+            times, loadgen.LengthSpec(1024, 128), rng))
+        e.submit(common.offline_pool(3000))
+        m = e.run(duration)
+        results[name] = (m, e)
+        rows.append(common.row(
+            f"fig8_{name}_p99ttft_ms", m.p99_ttft * 1e6 / 1e3,
+            f"off_thpt={m.offline_throughput:.0f};"
+            f"off_gen_thpt={m.offline_gen_throughput:.0f};"
+            f"blocking_swaps={e.ckpt.stats.blocking_swap_outs};"
+            f"free_discards={e.ckpt.stats.free_discards};"
+            f"prefetched_blocks={e.ckpt.stats.blocks_prefetched}",
+        ))
+    m0 = results["vllm++"][0]
+    m1 = results["+slo_sched"][0]
+    m3 = results["+prefetch"][0]
+    rows.append(common.row(
+        "fig8_derived_ttft_cut_by_scheduler", 0.0,
+        f"pct={(1-m1.p99_ttft/max(1e-9,m0.p99_ttft))*100:.1f} (paper: 71.4%)",
+    ))
+    rows.append(common.row(
+        "fig8_derived_offline_gen_thpt_recovered", 0.0,
+        f"sched_only={m1.offline_gen_throughput:.0f};"
+        f"full={m3.offline_gen_throughput:.0f};"
+        f"gain_pct={(m3.offline_gen_throughput/max(1e-9,m1.offline_gen_throughput)-1)*100:.1f}"
+        f" (paper: IC +14.0%, prefetch +13.6%; generated-token basis)",
+    ))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r)

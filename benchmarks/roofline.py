@@ -1,0 +1,75 @@
+"""§Roofline — aggregate the dry-run artifacts into the per-(arch × shape)
+roofline table (terms in seconds, dominant bottleneck, MODEL_FLOPS ratio).
+
+Reads experiments/dryrun/*.json produced by ``repro.launch.dryrun``; does
+NOT recompile (run the dry-run first: see README)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import row
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+
+def load(mesh: str = "16x16"):
+    out = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*_{mesh}.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def table(mesh: str = "16x16") -> str:
+    recs = load(mesh)
+    lines = [
+        "| arch | shape | compute(ms) | memory(ms) | collective(ms) | "
+        "bottleneck | useful_flops |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["status"] != "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | "
+                f"skipped: {r.get('reason','')[:50]} | — |"
+            )
+            continue
+        t = r["roofline_seconds"]
+        uf = r.get("useful_flops_ratio")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute']*1e3:.2f} | "
+            f"{t['memory']*1e3:.2f} | {t['collective']*1e3:.2f} | "
+            f"{r['bottleneck']} | {uf and round(uf,3)} |"
+        )
+    return "\n".join(lines)
+
+
+def main() -> list:
+    rows = []
+    recs = load("16x16")
+    if not recs:
+        return [row("roofline_missing", 0.0,
+                    f"run `python -m repro.launch.dryrun --all` first")]
+    n_ok = sum(1 for r in recs if r["status"] == "ok")
+    n_skip = sum(1 for r in recs if r["status"] == "skipped")
+    n_err = sum(1 for r in recs if r["status"] == "error")
+    rows.append(row("roofline_combos", float(len(recs)) * 1e6,
+                    f"ok={n_ok};skipped={n_skip};error={n_err}"))
+    for r in recs:
+        if r["status"] != "ok":
+            continue
+        t = r["roofline_seconds"]
+        dom = max(t.values())
+        rows.append(row(
+            f"roofline_{r['arch']}_{r['shape']}", dom * 1e6,
+            f"compute_ms={t['compute']*1e3:.2f};memory_ms={t['memory']*1e3:.2f};"
+            f"collective_ms={t['collective']*1e3:.2f};bound={r['bottleneck']};"
+            f"useful={r.get('useful_flops_ratio') and round(r['useful_flops_ratio'],3)}",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    print(table())

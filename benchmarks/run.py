@@ -1,0 +1,63 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark harness entry point.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Suites (one per paper artifact — see DESIGN.md §8):
+  fig5  — overall bursty-trace co-serving (Online-Only / vLLM++ / ConServe)
+  fig6  — ON/OFF phased load
+  fig7  — CV + request-rate sweeps
+  fig8  — optimization ablation stack
+  safepoint — §6.4.2 preemptible-worker overhead (real execution)
+  roofline  — §Roofline terms from the multi-pod dry-run artifacts
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="shorter simulated durations (CI-friendly)")
+    ap.add_argument("--only", action="append", default=None)
+    args = ap.parse_args()
+
+    from . import (fig5_overall, fig6_onoff, fig7_burstiness, fig8_ablation,
+                   roofline, safepoint_overhead)
+
+    dur5 = 240.0 if args.quick else 900.0
+    dur6 = 360.0 if args.quick else 720.0
+    dur7 = 120.0 if args.quick else 300.0
+    dur8 = 120.0 if args.quick else 300.0
+
+    suites = {
+        "fig5": lambda: fig5_overall.main(dur5),
+        "fig6": lambda: fig6_onoff.main(dur6),
+        "fig7": lambda: fig7_burstiness.main(dur7),
+        "fig8": lambda: fig8_ablation.main(dur8),
+        "safepoint": safepoint_overhead.main,
+        "roofline": roofline.main,
+    }
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites.items():
+        if args.only and name not in args.only:
+            continue
+        t0 = time.perf_counter()
+        try:
+            for r in fn():
+                print(r)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name}_ERROR,0,{type(e).__name__}: {e}")
+        print(f"{name}_suite_wall_s,{(time.perf_counter()-t0)*1e6:.0f},done",
+              file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Quickstart: serve a tiny model with both APIs in ~30 seconds on CPU.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import transformer as tf
+from repro.serving.api import Frontend
+from repro.serving.real_engine import RealEngine
+
+cfg = get_config("qwen2-0.5b").reduced()
+params = tf.init_params(cfg, jax.random.PRNGKey(0))
+engine = RealEngine(cfg, params)
+fe = Frontend(engine)
+rng = np.random.default_rng(0)
+
+# online: real-time streaming API (high priority)
+stream = fe.stream(rng.integers(0, cfg.vocab_size, 24).astype(np.int32),
+                   max_new_tokens=8)
+# offline: Batch API (best effort, harvests leftover capacity)
+job = fe.submit_batch(
+    [rng.integers(0, cfg.vocab_size, 32).astype(np.int32) for _ in range(4)],
+    max_new_tokens=8,
+)
+engine.run()
+print("stream tokens:", stream.poll())
+print("batch done:", job.done, "->", job.results())

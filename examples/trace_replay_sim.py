@@ -1,0 +1,13 @@
+"""Replay the bursty BurstGPT-like trace at full Llama-2-7B scale under the
+calibrated discrete-event cost model: the paper's Fig. 5 in one script.
+
+  PYTHONPATH=src python examples/trace_replay_sim.py [duration_seconds]
+"""
+import sys
+
+sys.path.insert(0, ".")
+from benchmarks import fig5_overall  # noqa: E402
+
+duration = float(sys.argv[1]) if len(sys.argv) > 1 else 900.0
+for r in fig5_overall.main(duration):
+    print(r)

@@ -1,0 +1,25 @@
+"""Train a ~100M-parameter dense model for a few hundred steps on CPU.
+
+  PYTHONPATH=src python examples/train_small.py [steps]
+"""
+import sys
+
+import jax
+
+from repro.configs import get_config
+from repro.training import optimizer as opt
+from repro.training.data import DataConfig, SyntheticTokens
+from repro.training.train_loop import train
+
+steps = int(sys.argv[1]) if len(sys.argv) > 1 else 200
+cfg = get_config("llama-2-7b").reduced(
+    num_layers=8, d_model=512, num_heads=8, num_kv_heads=8,
+    d_ff=2048, vocab_size=32000,
+)
+print(f"model: {cfg.param_count():,} params")
+data = SyntheticTokens(cfg, DataConfig(batch_size=8, seq_len=128))
+res = train(cfg, iter(data), steps,
+            opt.AdamWConfig(lr=3e-4, total_steps=steps),
+            key=jax.random.PRNGKey(0), log_every=20)
+assert res.losses[-1] < res.losses[0]
+print(f"done: loss {res.losses[0]:.3f} -> {res.losses[-1]:.3f}")

@@ -1,0 +1,66 @@
+"""Render §Dry-run / §Roofline tables for EXPERIMENTS.md from the artifacts."""
+import glob, json, os, sys
+
+def load(dirname, mesh):
+    recs = {}
+    for p in sorted(glob.glob(os.path.join(dirname, f"*_{mesh}.json"))):
+        r = json.load(open(p))
+        recs[(r["arch"], r["shape"])] = r
+    return recs
+
+def roofline_table(dirname="experiments/dryrun", mesh="16x16", baseline=None):
+    recs = load(dirname, mesh)
+    base = load(baseline, mesh) if baseline else {}
+    out = ["| arch | shape | compute (ms) | memory (ms) | collective (ms) | bound | useful FLOPs | vs baseline coll |",
+           "|---|---|---:|---:|---:|---|---:|---:|"]
+    shapes = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    archs = sorted({a for a, _ in recs})
+    for a in archs:
+        for s in shapes:
+            r = recs.get((a, s))
+            if r is None: continue
+            if r["status"] == "skipped":
+                out.append(f"| {a} | {s} | — | — | — | *skip: {r['reason'][:58]}* | — | — |")
+                continue
+            if r["status"] != "ok":
+                out.append(f"| {a} | {s} | — | — | — | ERROR | — | — |")
+                continue
+            t = r["roofline_seconds"]
+            uf = r.get("useful_flops_ratio")
+            b = base.get((a, s))
+            delta = ""
+            if b and b.get("status") == "ok":
+                bc = b["roofline_seconds"]["collective"]
+                if bc > 0:
+                    delta = f"{bc / max(t['collective'],1e-12):.2f}x"
+            out.append(
+                f"| {a} | {s} | {t['compute']*1e3:.2f} | {t['memory']*1e3:.2f} | "
+                f"{t['collective']*1e3:.2f} | {r['bottleneck']} | "
+                f"{uf and round(min(uf, 9.99),3)} | {delta} |")
+    return "\n".join(out)
+
+def dryrun_table(dirname="experiments/dryrun"):
+    out = ["| arch | shape | mesh | status | compile (s) | args (GB/dev) | temp (GB/dev) | fits 16GB |",
+           "|---|---|---|---|---:|---:|---:|---|"]
+    for p in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        r = json.load(open(p))
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | skip | — | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | ERROR | — | — | — | — |")
+            continue
+        m = r["memory"]
+        arg = (m["argument_bytes"] or 0) / 1e9
+        tmp = (m["temp_bytes"] or 0) / 1e9
+        fits = "yes" if arg + tmp <= 16.0 else f"NO ({arg+tmp:.0f}GB)"
+        out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+                   f"{r['compile_s']:.0f} | {arg:.1f} | {tmp:.1f} | {fits} |")
+    return "\n".join(out)
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "roofline"
+    if which == "roofline":
+        print(roofline_table(baseline="experiments/dryrun_baseline"))
+    elif which == "dryrun":
+        print(dryrun_table())

@@ -1,0 +1,19 @@
+"""Qwen2 0.5B — dense GQA with QKV bias [arXiv:2407.10671]."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-0.5b",
+    arch_type="dense",
+    source="arXiv:2407.10671",
+    num_layers=24,
+    d_model=896,
+    num_heads=14,
+    num_kv_heads=2,
+    head_dim=64,
+    d_ff=4864,
+    vocab_size=151936,
+    activation="swiglu",
+    qkv_bias=True,
+    tie_embeddings=True,
+    rope_theta=1000000.0,
+)

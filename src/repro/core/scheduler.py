@@ -1,0 +1,519 @@
+"""ConServe's unified preemptive scheduler (paper Algorithms 1 and 2).
+
+One scheduler serves both priority classes:
+
+* online requests are admitted first, within an SLO-derived token budget
+  (``calc_budget``); their decode tokens are never preempted by offline work;
+* offline requests harvest the residual budget ("SLOAwareSchedule(Q_off, τ)");
+* when online load spikes, scheduled offline requests are preempted at
+  scheduling time (``PreemptOverBudgetOffline`` — free if checkpointed), and
+  a *running* pure-offline batch can be aborted mid-iteration at a layer
+  safepoint (Algorithm 2, ``on_online_arrival``);
+* with no online work anywhere, the scheduler switches to *offline batching
+  mode*: budget is lifted to the saturation cap and safepoints are enabled.
+
+The scheduler owns request state + the block manager; it does not touch
+device memory — it returns an ``IterationPlan`` that the engine executes
+(really, or in simulated time) and then ``commit``s back.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.kvcache.block_manager import BlockManager, OutOfBlocks
+from repro.models.config import ModelConfig
+
+from .budget import TokenBudget, calc_budget
+from .profiler import (
+    BatchShape,
+    LatencyModel,
+    decode_shape,
+    prefill_chunk_shape,
+)
+from .request import Phase, Priority, Request
+from .slo import SLO
+
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class PrefillChunk:
+    request: Request
+    offset: int  # tokens already in device KV
+    length: int  # tokens this iteration
+
+
+@dataclass
+class IterationPlan:
+    prefill_chunks: List[PrefillChunk] = field(default_factory=list)
+    decode_reqs: List[Request] = field(default_factory=list)
+    shape: BatchShape = field(default_factory=BatchShape)
+    budget: Optional[TokenBudget] = None
+    pure_offline: bool = False  # safepoints enabled iff True (paper §4.3)
+    preempted: List[Request] = field(default_factory=list)
+
+    @property
+    def empty(self) -> bool:
+        return not self.prefill_chunks and not self.decode_reqs
+
+
+@dataclass
+class SchedulerConfig:
+    chunk_size: int = 512  # chunked-prefill unit (paper adopts Sarathi-style)
+    max_batch_seqs: int = 256
+    # Offline batching mode is MEMORY-limited, not token-limited (§4.2:
+    # "ignores the budget limit and sets the largest batch size that can
+    # saturate GPU compute or memory capacity"); responsiveness comes from
+    # safepoints.  Override with a finite cap to bound iteration length.
+    offline_batch_tokens: int = 1 << 30
+    budget_headroom: float = 0.8
+    avg_ctx_estimate: int = 1024
+    # ablation switches (benchmarks/fig8):
+    slo_aware: bool = True  # False -> vLLM++-style: ignore budget, pack max
+    preempt_running: bool = True  # Algorithm 2 urgent preemption
+    swap_on_preempt: bool = False  # PREEMPTSCHEDULING: swap instead of discard
+
+
+class UnifiedScheduler:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        model: LatencyModel,
+        slo: SLO,
+        blocks: BlockManager,
+        sched_cfg: SchedulerConfig = SchedulerConfig(),
+        clock: Optional[Callable[[], float]] = None,
+    ):
+        self.cfg = cfg
+        self.model = model
+        self.slo = slo
+        self.blocks = blocks
+        self.sc = sched_cfg
+        self.online_q: List[Request] = []
+        self.offline_q: List[Request] = []
+        self.running: List[Request] = []  # device-resident (prefill/decode)
+        self.preempted: List[Request] = []  # offline, evicted, resumable
+        self.finished: List[Request] = []
+        self.t_sched: float = 0.0  # when the current batch was dispatched
+        self.current_plan: Optional[IterationPlan] = None
+        self.preempt_flag: bool = False  # shared with the worker (Alg. 2)
+        self._clock = clock or (lambda: 0.0)
+        # engine hooks ----------------------------------------------------
+        # events: ("preempt_discard"|"preempt_swap"|"resume", req, n_blocks)
+        self.events: List[Tuple[str, Request, int]] = []
+        # gate for background swap-in admission (None = always allow)
+        self.io_gate: Optional[Callable[[], bool]] = None
+
+    # ------------------------------------------------------------ submission
+    def submit(self, req: Request) -> None:
+        (self.online_q if req.is_online else self.offline_q).append(req)
+
+    @property
+    def has_online_work(self) -> bool:
+        return bool(self.online_q) or any(
+            r.is_online for r in self.running if r.phase != Phase.FINISHED
+        )
+
+    def all_requests(self) -> List[Request]:
+        return (
+            self.online_q
+            + self.offline_q
+            + self.running
+            + self.preempted
+            + self.finished
+        )
+
+    # ---------------------------------------------------------------- memory
+    def _bytes_per_block(self) -> int:
+        from .profiler import block_bytes
+
+        return block_bytes(self.cfg, self.blocks.block_size)
+
+    def _ensure_blocks(
+        self, req: Request, new_total: int, plan: Optional[IterationPlan] = None
+    ) -> bool:
+        """Grow ``req`` to ``new_total`` tokens, preempting offline victims
+        under memory pressure.  Never preempts online requests, nor requests
+        already placed in the current plan.  Returns False if memory cannot
+        be found."""
+        planned_ids = set()
+        if plan is not None:
+            planned_ids = {r.request_id for r in plan.decode_reqs} | {
+                c.request.request_id for c in plan.prefill_chunks
+            }
+        while not self.blocks.can_allocate(req.request_id, new_total):
+            victim = self._pick_memory_victim(exclude=req, planned=planned_ids)
+            if victim is None:
+                return False
+            self._preempt_offline(victim)
+            if plan is not None:
+                plan.preempted.append(victim)
+        self.blocks.grow(req.request_id, new_total)
+        return True
+
+    def _pick_memory_victim(
+        self, exclude: Request, planned: set
+    ) -> Optional[Request]:
+        """Offline victim for memory reclamation: fully-checkpointed first
+        (free discard), then most-recently-started (LIFO, like vLLM)."""
+        offline_running = [
+            r
+            for r in self.running
+            if not r.is_online
+            and r is not exclude
+            and r.request_id not in planned
+        ]
+        if not offline_running:
+            return None
+        ckpt = [
+            r
+            for r in offline_running
+            if self.blocks.is_fully_checkpointed(r.request_id)
+        ]
+        if ckpt:
+            return ckpt[-1]
+        return offline_running[-1]
+
+    def _preempt_offline(self, req: Request) -> None:
+        """PREEMPTSCHEDULING (Alg. 1 line 29): discard or swap out."""
+        if req not in self.running:
+            raise AssertionError(
+                f"preempting non-resident request {req.request_id}"
+            )
+        swapped = False
+        if self.sc.swap_on_preempt and not self.blocks.is_fully_checkpointed(
+            req.request_id
+        ):
+            try:
+                copies = self.blocks.preempt_swap_out(req.request_id)
+                recoverable = req.total_len
+                self.events.append(("preempt_swap", req, len(copies)))
+                swapped = True
+            except OutOfBlocks:
+                pass  # host pool full: fall back to discard (vLLM behaviour)
+        if not swapped:
+            self.blocks.preempt_discard(req.request_id)
+            recoverable = self.blocks.tokens_recoverable_from_host(req.request_id)
+            self.events.append(("preempt_discard", req, 0))
+        req.on_preempt(recoverable)
+        self.running.remove(req)
+        self.preempted.append(req)
+
+    _sat_cache: Optional[int] = None
+
+    def _saturation_tokens(self) -> int:
+        """Tokens per iteration that saturate the accelerator's compute
+        ("largest batch size that can saturate GPU compute", §4.2): past the
+        roofline knee, bigger batches add latency without throughput.
+        Estimated from the latency model: n where the fixed cost (weight
+        load + dispatch) is <=25% of the iteration."""
+        if self._sat_cache is None:
+            from .profiler import BatchShape
+
+            base = self.model.iter_time(
+                BatchShape(prefill_tokens=1, prefill_attn_tokens=1.0,
+                           prefill_ctx_end=1, num_seqs=1)
+            )
+            big_n = 8192
+            big = self.model.iter_time(
+                BatchShape(prefill_tokens=big_n,
+                           prefill_attn_tokens=float(big_n) * 512,
+                           prefill_ctx_end=big_n, num_seqs=8)
+            )
+            per_tok = max((big - base) / big_n, 1e-9)
+            self._sat_cache = max(2048, int(4 * base / per_tok))
+        return self._sat_cache
+
+    # ------------------------------------------------------------- main plan
+    def plan_iteration(self, now: float) -> IterationPlan:
+        """Algorithm 1, one scheduling step."""
+        plan = IterationPlan()
+        self._reap_finished()
+
+        online_decode = [
+            r for r in self.running if r.is_online and r.phase == Phase.DECODE
+        ]
+        online_prefill = [
+            r for r in self.running if r.is_online and r.phase == Phase.PREFILL
+        ]
+        offline_decode = [
+            r for r in self.running if not r.is_online and r.phase == Phase.DECODE
+        ]
+        offline_prefill = [
+            r for r in self.running if not r.is_online and r.phase == Phase.PREFILL
+        ]
+
+        offline_mode = not self.has_online_work
+        if offline_mode:
+            # Offline batching mode (Alg. 1 lines 20-22): lift the budget to
+            # the saturation point (auto-derived from the latency model's
+            # roofline knee when left at the default); responsiveness comes
+            # from safepoints.  An explicit finite cap is honored verbatim.
+            cap = self.sc.offline_batch_tokens
+            if cap >= (1 << 29):
+                cap = self._saturation_tokens()
+            budget = TokenBudget(
+                max_total_tokens=cap, max_seqs=self.sc.max_batch_seqs
+            )
+        elif self.sc.slo_aware:
+            has_decode = bool(online_decode)
+            budget = calc_budget(
+                self.model,
+                self.slo,
+                has_decode=has_decode,
+                avg_ctx=self.sc.avg_ctx_estimate,
+                max_seqs=self.sc.max_batch_seqs,
+                headroom=self.sc.budget_headroom,
+            )
+        else:  # vLLM++ ablation: priority order but throughput-greedy budget
+            budget = TokenBudget(
+                max_total_tokens=self.sc.offline_batch_tokens,
+                max_seqs=self.sc.max_batch_seqs,
+            )
+        plan.budget = budget
+        scheduled = 0
+
+        # ---- 1. online decodes: always first, one token each --------------
+        for r in online_decode:
+            if not self._ensure_blocks(r, r.total_len + 1, plan):
+                break  # pathological: memory full of online requests
+            plan.decode_reqs.append(r)
+            plan.shape = plan.shape.merge(decode_shape(r.total_len, self.cfg))
+            scheduled += 1
+
+        # ---- 2. online prefills (running chunked first, then waiting) -----
+        scheduled = self._schedule_prefills(
+            plan, online_prefill, budget, scheduled, now
+        )
+        admitted = self._admit_waiting(
+            plan, self.online_q, budget, scheduled, now
+        )
+        scheduled = admitted
+
+        # ---- 3. preempt over-budget offline (Alg. 1 line 16) --------------
+        # Offline decodes join only within what remains.  Under online
+        # pressure, over-budget offline decodes are preempted (freeing memory
+        # and budget); in offline mode they simply wait unscheduled (keeping
+        # their KV — continuous batching rotates them in later).
+        room = budget.remaining(scheduled)
+        fit, spill = offline_decode[:room], offline_decode[room:]
+        if spill and self.has_online_work:
+            for r in spill:
+                if r.phase == Phase.PREEMPTED:
+                    continue  # already a memory victim earlier in this plan
+                self._preempt_offline(r)
+                plan.preempted.append(r)
+        for r in fit:
+            if r.phase == Phase.PREEMPTED:
+                continue  # became a memory victim earlier in this plan
+            if not self._ensure_blocks(r, r.total_len + 1, plan):
+                self._preempt_offline(r)
+                plan.preempted.append(r)
+                continue
+            plan.decode_reqs.append(r)
+            plan.shape = plan.shape.merge(decode_shape(r.total_len, self.cfg))
+            scheduled += 1
+
+        # ---- 4. offline fills the residual budget --------------------------
+        scheduled = self._schedule_prefills(
+            plan, offline_prefill, budget, scheduled, now
+        )
+        # resume preempted offline before admitting fresh ones (fairness +
+        # bounded recompute debt)
+        scheduled = self._resume_preempted(plan, budget, scheduled, now)
+        scheduled = self._admit_waiting(
+            plan, self.offline_q, budget, scheduled, now
+        )
+
+        plan.pure_offline = not any(
+            r.is_online
+            for r in plan.decode_reqs + [c.request for c in plan.prefill_chunks]
+        ) and not plan.empty
+        self.current_plan = plan
+        self.t_sched = now
+        return plan
+
+    # ----------------------------------------------------- scheduling pieces
+    def _schedule_prefills(
+        self,
+        plan: IterationPlan,
+        reqs: List[Request],
+        budget: TokenBudget,
+        scheduled: int,
+        now: float,
+    ) -> int:
+        for r in reqs:
+            if r.phase == Phase.PREEMPTED:
+                continue  # became a memory victim earlier in this plan
+            room = budget.remaining(scheduled)
+            if room <= 0:
+                break
+            chunk = min(r.prefill_remaining, self.sc.chunk_size, room)
+            if chunk <= 0:
+                continue
+            if not self._ensure_blocks(r, r.num_prefilled + chunk, plan):
+                break
+            plan.prefill_chunks.append(
+                PrefillChunk(r, offset=r.num_prefilled, length=chunk)
+            )
+            plan.shape = plan.shape.merge(
+                prefill_chunk_shape(r.num_prefilled, chunk, self.cfg)
+            )
+            scheduled += chunk
+        return scheduled
+
+    def _admit_waiting(
+        self,
+        plan: IterationPlan,
+        queue: List[Request],
+        budget: TokenBudget,
+        scheduled: int,
+        now: float,
+    ) -> int:
+        admitted: List[Request] = []
+        for r in queue:
+            room = budget.remaining(scheduled)
+            if room <= 0 or plan.shape.num_seqs >= budget.max_seqs:
+                break
+            chunk = min(r.prefill_remaining, self.sc.chunk_size, room)
+            if chunk <= 0:
+                break
+            if not self.blocks.has_seq(r.request_id):
+                self.blocks.register_seq(r.request_id)
+            if not self._ensure_blocks(r, chunk, plan):
+                if r.is_online:
+                    # keep trying victims is done inside _ensure_blocks; if it
+                    # failed, memory is full of online work — stop admitting.
+                    pass
+                break
+            r.phase = Phase.PREFILL
+            if r.first_scheduled_time is None:
+                r.first_scheduled_time = now
+            self.running.append(r)
+            admitted.append(r)
+            plan.prefill_chunks.append(PrefillChunk(r, offset=0, length=chunk))
+            plan.shape = plan.shape.merge(
+                prefill_chunk_shape(0, chunk, self.cfg)
+            )
+            scheduled += chunk
+        for r in admitted:
+            queue.remove(r)
+        return scheduled
+
+    def _resume_preempted(
+        self,
+        plan: IterationPlan,
+        budget: TokenBudget,
+        scheduled: int,
+        now: float,
+    ) -> int:
+        """Bring preempted offline requests back: swap-in is planned by the
+        checkpointer/prefetcher; recompute-needed tokens re-enter as prefill
+        chunks here."""
+        still: List[Request] = []
+        for r in self.preempted:
+            room = budget.remaining(scheduled)
+            if room <= 0 or not self.blocks.can_resume(r.request_id):
+                still.append(r)
+                continue
+            if self.io_gate is not None and not self.io_gate():
+                # host link saturated: defer swap-in to a later round
+                still.append(r)
+                continue
+            copies = self.blocks.resume(r.request_id)
+            self.events.append(("resume", r, len(copies)))
+            # tokens recoverable from host come back via (background) swap-in;
+            # the rest is recompute -> prefill chunks
+            r.num_prefilled = r.host_recoverable
+            r.phase = Phase.PREFILL if r.prefill_remaining else Phase.DECODE
+            self.running.append(r)
+            chunk = min(r.prefill_remaining, self.sc.chunk_size, room)
+            if chunk > 0:
+                plan.prefill_chunks.append(
+                    PrefillChunk(r, offset=r.num_prefilled, length=chunk)
+                )
+                plan.shape = plan.shape.merge(
+                    prefill_chunk_shape(r.num_prefilled, chunk, self.cfg)
+                )
+                scheduled += chunk
+            elif r.phase == Phase.DECODE:
+                plan.decode_reqs.append(r)
+                plan.shape = plan.shape.merge(
+                    decode_shape(r.total_len, self.cfg)
+                )
+                scheduled += 1
+        self.preempted = still
+        return scheduled
+
+    def _reap_finished(self) -> None:
+        done = [r for r in self.running if r.phase == Phase.FINISHED]
+        for r in done:
+            self.running.remove(r)
+            if self.blocks.has_seq(r.request_id):
+                self.blocks.free_seq(r.request_id)
+            self.finished.append(r)
+
+    # ------------------------------------------------------------- commit
+    def commit(
+        self,
+        plan: IterationPlan,
+        now: float,
+        aborted: bool = False,
+        tokens: Optional[Dict[int, int]] = None,
+    ) -> None:
+        """Apply the results of an executed (or aborted) iteration.
+
+        ``tokens`` (real-execution mode) maps request_id -> sampled token for
+        every request that produced one this iteration; simulated mode leaves
+        it None and only counts."""
+        self.current_plan = None
+        if aborted:
+            # Partial iteration discarded (Alg. 2 / §4.3): KV for *previous*
+            # tokens is intact (stateless inference) — only this iteration's
+            # would-be outputs are lost.  Requests simply stay schedulable.
+            return
+
+        def tok(r: Request) -> Optional[int]:
+            return None if tokens is None else tokens.get(r.request_id)
+
+        for chunk in plan.prefill_chunks:
+            r = chunk.request
+            r.num_prefilled += chunk.length
+            if r.prefill_remaining == 0:
+                # prompt fully prefilled: first token is produced by this
+                # same iteration (prefill emits the first logits)
+                if r.num_generated == 0:
+                    r.record_token(now, tok(r))
+                    # the emitted token occupies KV on the *next* decode
+                    r.phase = Phase.DECODE if not r.done else Phase.FINISHED
+                else:
+                    # resumed recompute complete
+                    r.phase = Phase.DECODE
+        for r in plan.decode_reqs:
+            r.record_token(now, tok(r))
+        self._reap_finished()
+
+    # ----------------------------------------------------------- Algorithm 2
+    def on_online_arrival(self, req: Request, now: float) -> bool:
+        """Urgent-path handler (Algorithm 2).  Returns True if the running
+        batch must be preempted at the next safepoint to meet TTFT."""
+        self.submit(req)
+        if not self.sc.preempt_running:
+            return False
+        plan = self.current_plan
+        if plan is None or plan.empty or not plan.pure_offline:
+            return False  # co-serving batches are already budget-bounded
+        t_est = self.model.iter_time(plan.shape)
+        t_remain = max(0.0, t_est - (now - self.t_sched))
+        # time to serve the waiting online queue once this batch drains
+        q_shape = BatchShape()
+        for r in self.online_q:
+            q_shape = q_shape.merge(
+                prefill_chunk_shape(0, min(r.prefill_remaining, self.sc.chunk_size), self.cfg)
+            )
+        t_exec = self.model.iter_time(q_shape)
+        if t_remain + t_exec > self.slo.ttft:
+            self.preempt_flag = True
+            return True
+        return False

@@ -1,0 +1,158 @@
+"""Activation-sharding constraints (Megatron sequence parallelism).
+
+Without a constraint, GSPMD keeps the residual stream (B, T, d) replicated
+across the ``model`` axis; the remat-saved per-layer residuals of a 64-layer
+104B model are then ~100 GB/chip — compile-time OOM.  Constraining the
+residual to be sharded over (batch axes, sequence→model) makes GSPMD
+all-gather the sequence only inside attention/MLP blocks and reduce-scatter
+after, exactly Megatron-LM sequence parallelism; saved activations shrink by
+the TP degree.
+
+The transformer layer code is distribution-agnostic: launchers install the
+constraint via ``activation_sharding(mesh)`` and ``constrain_residual`` is a
+no-op when nothing is installed (CPU tests, real engine).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+@contextlib.contextmanager
+def activation_sharding(
+    mesh: Mesh,
+    batch_axes: Tuple[str, ...] = ("data",),
+    seq_axis: Optional[str] = "model",
+    decode_dshard: bool = False,
+):
+    """``decode_dshard``: shard one-token decode activations on d_model over
+    the FSDP axis — only correct when the weights ARE FSDP-sharded (large
+    models); for TP-only weights it forces needless reshards (yi-34b decode
+    regressed 4.8x — §Perf hillclimb #3)."""
+    prev = getattr(_state, "cfg", None)
+    _state.cfg = (mesh, batch_axes, seq_axis, decode_dshard)
+    try:
+        yield
+    finally:
+        _state.cfg = prev
+
+
+def constrain_heads(x):
+    """Constrain a (B, T, H, D) attention tensor to heads-over-model (the
+    Ulysses-style layout): gathers the sequence ONCE per layer instead of
+    per attention block-scan step.  No-op when inactive or indivisible."""
+    cfg = getattr(_state, "cfg", None)
+    if cfg is None or x.ndim != 4:
+        return x
+    mesh, batch_axes, seq_axis, decode_dshard = cfg
+    if seq_axis is None:
+        return x
+    b, t, h, _ = x.shape
+    if t <= 1 or h % mesh.shape[seq_axis] != 0:
+        return x
+    bsize = 1
+    for a in batch_axes:
+        bsize *= mesh.shape[a]
+    spec_b = (batch_axes if len(batch_axes) > 1 else batch_axes[0]) if (
+        b % bsize == 0 and b > 1
+    ) else None
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(spec_b, None, seq_axis, None))
+    )
+
+
+def constrain_block_input(x, weight_bytes: int = 0, force: bool = False):
+    """Megatron sequence-parallel block entry: gather the sequence dim
+    (batch stays sharded).  Applied to the normed input of attention/MLP
+    blocks so GSPMD gathers the ~0.1 GB activation instead of replicating
+    the multi-GB 2D-sharded weight (its observed fallback when both matmul
+    operands need resharding — §Perf hillclimb #1, H5).
+
+    ``weight_bytes``: the block's total weight bytes.  Gathering the
+    activation only pays when it is SMALLER than the FULL weight GSPMD
+    would otherwise replicate ("involuntary full rematerialization") — for
+    small models (HuBERT: 13 MB MLP weights vs 167 MB activations) the
+    weight-side resharding is cheaper, so this becomes a no-op (measured
+    regression otherwise; see EXPERIMENTS.md §Perf).
+
+    ``force``: attention blocks whose (kv-)head counts do not divide the
+    model axis MUST gather — head-sharded attention is impossible and the
+    unsharded-seq fallback produces catastrophic per-score-block
+    all-reduces (qwen2: 14Q/2KV heads on a 16-way axis, 7.7x collective
+    from gathering)."""
+    cfg = getattr(_state, "cfg", None)
+    if cfg is None or x.ndim != 3:
+        return x
+    mesh, batch_axes, seq_axis, decode_dshard = cfg
+    b, t, _ = x.shape
+    if t <= 1:
+        if not decode_dshard:
+            return x
+        # Decode: shard the activation's CONTRACTION dim (d_model) over the
+        # FSDP/data axis to match the weights' d-over-data sharding: the
+        # projections then run as local partial dots + an all-reduce of the
+        # ~MB outputs, instead of GSPMD's fallback of gathering multi-GB
+        # weights per layer (§Perf hillclimb #3).  Replicating the activation
+        # does NOT work — GSPMD's dot strategy follows operand shardings, and
+        # a replicated lhs makes it gather the rhs.
+        d = x.shape[-1]
+        fax = batch_axes[-1]  # 'data'
+        if d % mesh.shape[fax] == 0:
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(None, None, fax))
+            )
+        return x
+    bsize = 1
+    for a in batch_axes:
+        bsize *= mesh.shape[a]
+    if weight_bytes and not force:
+        act_local = b * t * x.shape[-1] * 2 // max(1, bsize)
+        if act_local >= weight_bytes:
+            return x  # weight-side resharding is the cheaper side
+    spec_b = (batch_axes if len(batch_axes) > 1 else batch_axes[0]) if (
+        b % bsize == 0 and b > 1
+    ) else None
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(spec_b, None, None))
+    )
+
+
+def constrain_residual(x):
+    """Constrain a (B, T, d) residual-stream tensor; identity if inactive,
+    if T==1 (decode) or when dims don't divide the mesh."""
+    cfg = getattr(_state, "cfg", None)
+    if cfg is None or x.ndim != 3:
+        return x
+    mesh, batch_axes, seq_axis, decode_dshard = cfg
+    b, t, _ = x.shape
+    bsize = 1
+    for a in batch_axes:
+        bsize *= mesh.shape[a]
+    spec_b = (batch_axes if len(batch_axes) > 1 else batch_axes[0]) if (
+        b % bsize == 0 and b > 1
+    ) else None
+    spec_t = (
+        seq_axis
+        if seq_axis and t > 1 and t % mesh.shape[seq_axis] == 0
+        else None
+    )
+    if spec_b is None and spec_t is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(spec_b, spec_t, None))
+    )
+
+
+def model_axis_size() -> int:
+    """Size of the installed seq/model axis (0 when inactive)."""
+    cfg = getattr(_state, "cfg", None)
+    if cfg is None:
+        return 0
+    mesh, _, seq_axis, _ = cfg
+    return mesh.shape[seq_axis] if seq_axis else 0

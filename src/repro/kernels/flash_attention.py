@@ -1,0 +1,176 @@
+"""Chunked-prefill flash attention — Pallas TPU kernel.
+
+The compute-bound hot spot of ConServe's co-serving iteration is the prefill
+chunk; this kernel is the TPU adaptation (VMEM-tiled online softmax, MXU
+128-aligned blocks) of the FlashAttention scheme the paper's baseline stack
+(vLLM) uses on GPU.
+
+Layout: q (B, H, Tq, D), k/v (B, Hkv, Tk, D) — head-major so the (T, D)
+tiles are MXU-friendly.  Grid (B, H, Tq/bq, Tk/bk); the kv dimension is the
+innermost sequential axis, with fp32 accumulators (acc, m, l) carried in
+VMEM scratch across kv steps.  Causal and sliding-window masks are applied
+from absolute positions, so one kernel serves full prefill, chunked prefill
+(q offset != 0), and SWA archs (Mixtral).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,  # (1, 1, bq, D)
+    k_ref,  # (1, 1, bk, D)
+    v_ref,  # (1, 1, bk, D)
+    o_ref,  # (1, 1, bq, D)
+    acc_ref,  # (bq, D) f32 scratch
+    m_ref,  # (bq, 1) f32 scratch
+    l_ref,  # (bq, 1) f32 scratch
+    *,
+    scale: float,
+    causal: bool,
+    sliding_window: int,
+    q_offset: int,
+    kv_len: int,
+    block_q: int,
+    block_k: int,
+    kv_steps: int,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (bq, D)
+    k = k_ref[0, 0].astype(jnp.float32)  # (bk, D)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (bq, bk)
+
+    # Absolute positions: queries live at q_offset + qi*bq + row.
+    q_pos = q_offset + qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0
+    )
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1
+    )
+    mask = k_pos < kv_len  # kill padded keys
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if sliding_window:
+        mask = mask & (k_pos > q_pos - sliding_window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]  # (bq, 1)
+    l_prev = l_ref[...]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)  # (bq, bk); rows with all-masked stay ~0
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ki == kv_steps - 1)
+    def _finalize():
+        l = l_ref[...]
+        safe_l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0, :, :] = (acc_ref[...] / safe_l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal",
+        "sliding_window",
+        "q_offset",
+        "block_q",
+        "block_k",
+        "interpret",
+    ),
+)
+def flash_attention(
+    q: jnp.ndarray,  # (B, Tq, H, D)
+    k: jnp.ndarray,  # (B, Tk, Hkv, D)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    sliding_window: int = 0,
+    q_offset: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Returns (B, Tq, H, D)."""
+    b, tq, h, d = q.shape
+    _, tk, hkv, _ = k.shape
+    g = h // hkv
+
+    block_q = min(block_q, tq)
+    block_k = min(block_k, tk)
+    pad_q = (-tq) % block_q
+    pad_k = (-tk) % block_k
+    qt = jnp.moveaxis(q, 1, 2)  # (B, H, Tq, D)
+    kt = jnp.moveaxis(k, 1, 2)  # (B, Hkv, Tk, D)
+    vt = jnp.moveaxis(v, 1, 2)
+    if pad_q:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        # Padded keys sit at positions >= tk; causal masking alone does not
+        # kill them for the last queries, so push them out of every window.
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    tqp, tkp = tq + pad_q, tk + pad_k
+    q_steps, kv_steps = tqp // block_q, tkp // block_k
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=d**-0.5,
+        causal=causal,
+        sliding_window=sliding_window,
+        q_offset=q_offset,
+        kv_len=tk,
+        block_q=block_q,
+        block_k=block_k,
+        kv_steps=kv_steps,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, q_steps, kv_steps),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+            pl.BlockSpec(
+                (1, 1, block_k, d), lambda b_, h_, qi, ki, g=g: (b_, h_ // g, ki, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, block_k, d), lambda b_, h_, qi, ki, g=g: (b_, h_ // g, ki, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, block_q, d), lambda b_, h_, qi, ki: (b_, h_, qi, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, h, tqp, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    out = out[:, :, :tq, :]
+    return jnp.moveaxis(out, 2, 1)  # (B, Tq, H, D)

@@ -1,0 +1,66 @@
+"""Public jit'd entry points for the kernel layer.
+
+Backend dispatch: on TPU the Pallas kernels run compiled; everywhere else
+(this CPU container) they run in ``interpret=True`` mode, or fall back to
+the jnp reference for speed (interpret mode executes the kernel body
+python-side per grid step — exact but slow for large grids).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention as _flash_pallas
+from .kv_checkpoint import checkpoint_gather as _ckpt_pallas
+from .kv_checkpoint import checkpoint_scatter
+from .paged_attention import paged_attention as _paged_pallas
+
+__all__ = [
+    "flash_attention",
+    "paged_attention",
+    "checkpoint_gather",
+    "checkpoint_scatter",
+    "kernel_backend",
+]
+
+
+def kernel_backend() -> str:
+    """'pallas' on TPU, 'interpret' when forced, else 'ref' (CPU default)."""
+    forced = os.environ.get("REPRO_KERNEL_BACKEND")
+    if forced:
+        return forced
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def flash_attention(q, k, v, *, causal=True, sliding_window=0, q_offset=0,
+                    block_q=128, block_k=128):
+    be = kernel_backend()
+    if be == "ref":
+        return ref.flash_attention_ref(
+            q, k, v, causal=causal, sliding_window=sliding_window,
+            q_offset=q_offset,
+        )
+    return _flash_pallas(
+        q, k, v, causal=causal, sliding_window=sliding_window,
+        q_offset=q_offset, block_q=block_q, block_k=block_k,
+        interpret=(be == "interpret"),
+    )
+
+
+def paged_attention(q, k_pool, v_pool, block_tables, seq_lens):
+    be = kernel_backend()
+    if be == "ref":
+        return ref.paged_attention_ref(q, k_pool, v_pool, block_tables, seq_lens)
+    return _paged_pallas(
+        q, k_pool, v_pool, block_tables, seq_lens, interpret=(be == "interpret")
+    )
+
+
+def checkpoint_gather(pool, block_ids):
+    be = kernel_backend()
+    if be == "ref":
+        return ref.checkpoint_gather_ref(pool, block_ids)
+    return _ckpt_pallas(pool, block_ids, interpret=(be == "interpret"))

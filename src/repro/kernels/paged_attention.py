@@ -1,0 +1,133 @@
+"""Paged decode attention — Pallas TPU kernel.
+
+The memory-bound hot spot of decode: one query token per sequence attends
+over its KV cache stored as *pages* in a global block pool, addressed via a
+block table.  The TPU adaptation streams KV pages HBM→VMEM one page per grid
+step, using scalar-prefetched block tables in the BlockSpec index maps (the
+TPU-native analogue of the GPU gather: the DMA engine performs the
+indirection, no materialized gather).
+
+Layout: q (B, Hkv, G, D) (G = query heads per KV head — GQA group), pools
+(N, page, Hkv, D).  Grid (B, Hkv, M) with M = max pages per sequence; the
+page dimension is innermost/sequential with fp32 online-softmax accumulators
+in VMEM scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(
+    block_tables_ref,  # (B, M) scalar-prefetch (SMEM)
+    seq_lens_ref,  # (B,) scalar-prefetch (SMEM)
+    q_ref,  # (1, 1, G, D)
+    k_ref,  # (1, page, 1, D)
+    v_ref,  # (1, page, 1, D)
+    o_ref,  # (1, 1, G, D)
+    acc_ref,  # (G, D) f32
+    m_ref,  # (G, 1) f32
+    l_ref,  # (G, 1) f32
+    *,
+    scale: float,
+    page: int,
+    pages_per_seq: int,
+):
+    b = pl.program_id(0)
+    mi = pl.program_id(2)
+
+    @pl.when(mi == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    seq_len = seq_lens_ref[b]
+    page_start = mi * page
+
+    @pl.when(page_start < seq_len)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (G, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # (page, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (G, page)
+        tok = page_start + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+        s = jnp.where(tok < seq_len, s, NEG_INF)
+
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(mi == pages_per_seq - 1)
+    def _finalize():
+        l = l_ref[...]
+        safe_l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0, :, :] = (acc_ref[...] / safe_l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(
+    q: jnp.ndarray,  # (B, H, D)
+    k_pool: jnp.ndarray,  # (N, page, Hkv, D)
+    v_pool: jnp.ndarray,
+    block_tables: jnp.ndarray,  # (B, M) int32, -1 padded
+    seq_lens: jnp.ndarray,  # (B,) int32 — valid tokens (incl. current)
+    *,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Returns (B, H, D)."""
+    b, h, d = q.shape
+    n, page, hkv, _ = k_pool.shape
+    g = h // hkv
+    m = block_tables.shape[1]
+
+    qg = q.reshape(b, hkv, g, d)
+    tables = jnp.maximum(block_tables, 0).astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, m),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda b_, h_, mi, bt, sl: (b_, h_, 0, 0)),
+            pl.BlockSpec(
+                (1, page, 1, d),
+                lambda b_, h_, mi, bt, sl: (bt[b_, mi], 0, h_, 0),
+            ),
+            pl.BlockSpec(
+                (1, page, 1, d),
+                lambda b_, h_, mi, bt, sl: (bt[b_, mi], 0, h_, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, g, d), lambda b_, h_, mi, bt, sl: (b_, h_, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _paged_kernel, scale=d**-0.5, page=page, pages_per_seq=m
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        interpret=interpret,
+    )(tables, seq_lens.astype(jnp.int32), qg, k_pool, v_pool)
+    return out.reshape(b, h, d)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(
+    q: jnp.ndarray,  # (B, Tq, H, D)
+    k: jnp.ndarray,  # (B, Tk, Hkv, D)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    sliding_window: int = 0,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    b, tq, h, d = q.shape
+    tk, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, tq, hkv, g, d).astype(jnp.float32)
+    scores = jnp.einsum("bthgd,bshd->bhgts", qg, k.astype(jnp.float32)) * d**-0.5
+    if causal or sliding_window:
+        qp = q_offset + jnp.arange(tq)[:, None]
+        kp = jnp.arange(tk)[None, :]
+        mask = jnp.ones((tq, tk), bool)
+        if causal:
+            mask = mask & (kp <= qp)
+        if sliding_window:
+            mask = mask & (kp > qp - sliding_window)
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgts,bshd->bthgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, tq, h, d).astype(q.dtype)
+
+
+# Paged decode attention oracle lives next to the physical layout helpers.
+from repro.kvcache.cache_ops import (  # noqa: E402,F401
+    checkpoint_gather_ref,
+    paged_attention_ref,
+)

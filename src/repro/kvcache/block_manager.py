@@ -1,0 +1,301 @@
+"""Paged KV-cache block manager (vLLM-style) with ConServe's checkpoint map.
+
+Host-side bookkeeping: which physical device blocks belong to which sequence,
+which device block has a host-memory checkpoint copy (the paper's "extended
+field of the virtual page table", §5), and which sequences live only in host
+memory (preempted-with-checkpoint).
+
+Device data movement is *not* done here — the engine issues copies; this
+class is the single source of truth for what must move and what can be
+discarded for free.  ConServe's key property: discarding a fully
+checkpointed sequence costs zero device I/O (just table edits), while an
+un-checkpointed preemption forces either a blocking swap-out or a recompute.
+
+Terminology (all integers are block ids):
+  device block — slot in the preallocated device KV pool
+  host block   — slot in the host staging pool
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+
+class OutOfBlocks(Exception):
+    pass
+
+
+@dataclass
+class SeqBlocks:
+    """Block state of one sequence."""
+
+    seq_id: int
+    num_tokens: int = 0
+    device_blocks: List[int] = field(default_factory=list)
+    host_blocks: List[int] = field(default_factory=list)  # parallel: -1 = none
+    on_device: bool = True  # False once swapped out / preempted-to-host
+
+    def num_full_or_partial_blocks(self, block_size: int) -> int:
+        return math.ceil(self.num_tokens / block_size) if self.num_tokens else 0
+
+    @property
+    def num_checkpointed(self) -> int:
+        return sum(1 for h in self.host_blocks if h >= 0)
+
+
+class BlockManager:
+    def __init__(self, num_device_blocks: int, num_host_blocks: int, block_size: int):
+        if num_device_blocks <= 0 or block_size <= 0:
+            raise ValueError("pool sizes must be positive")
+        self.block_size = block_size
+        self.num_device_blocks = num_device_blocks
+        self.num_host_blocks = num_host_blocks
+        self._free_device: List[int] = list(range(num_device_blocks - 1, -1, -1))
+        self._free_host: List[int] = list(range(num_host_blocks - 1, -1, -1))
+        self._seqs: Dict[int, SeqBlocks] = {}
+
+    # ------------------------------------------------------------------ info
+    @property
+    def free_device_blocks(self) -> int:
+        return len(self._free_device)
+
+    @property
+    def used_device_blocks(self) -> int:
+        return self.num_device_blocks - len(self._free_device)
+
+    @property
+    def free_host_blocks(self) -> int:
+        return len(self._free_host)
+
+    @property
+    def device_utilization(self) -> float:
+        return self.used_device_blocks / self.num_device_blocks
+
+    def seq(self, seq_id: int) -> SeqBlocks:
+        return self._seqs[seq_id]
+
+    def has_seq(self, seq_id: int) -> bool:
+        return seq_id in self._seqs
+
+    def seq_ids(self) -> List[int]:
+        return list(self._seqs)
+
+    def blocks_for_tokens(self, num_tokens: int) -> int:
+        return math.ceil(num_tokens / self.block_size) if num_tokens else 0
+
+    def can_allocate(self, seq_id: int, new_total_tokens: int) -> bool:
+        cur = self._seqs.get(seq_id)
+        have = len(cur.device_blocks) if cur and cur.on_device else 0
+        need = self.blocks_for_tokens(new_total_tokens) - have
+        return need <= len(self._free_device)
+
+    # ------------------------------------------------------------------ alloc
+    def register_seq(self, seq_id: int) -> SeqBlocks:
+        if seq_id in self._seqs:
+            raise ValueError(f"seq {seq_id} already registered")
+        sb = SeqBlocks(seq_id=seq_id)
+        self._seqs[seq_id] = sb
+        return sb
+
+    def grow(self, seq_id: int, new_total_tokens: int) -> List[int]:
+        """Extend a resident sequence to ``new_total_tokens``; returns the
+        newly allocated device block ids."""
+        sb = self._seqs[seq_id]
+        if not sb.on_device:
+            raise ValueError(f"seq {seq_id} is not resident")
+        if new_total_tokens <= sb.num_tokens:
+            return []  # capacity already covers (e.g. recompute after resume)
+        need = self.blocks_for_tokens(new_total_tokens) - len(sb.device_blocks)
+        if need > len(self._free_device):
+            raise OutOfBlocks(
+                f"need {need} device blocks, have {len(self._free_device)}"
+            )
+        new = [self._free_device.pop() for _ in range(need)]
+        sb.device_blocks.extend(new)
+        sb.host_blocks.extend([-1] * len(new))
+        sb.num_tokens = new_total_tokens
+        return new
+
+    # ------------------------------------------------------------ checkpoint
+    def checkpoint_candidates(self, seq_id: int) -> List[Tuple[int, int]]:
+        """(index, device_block) pairs of *complete* blocks lacking a host copy.
+
+        Only complete blocks are checkpointed: a partial tail block would be
+        re-written every iteration; the paper amortizes exactly one block per
+        ``block_size`` generated tokens per sequence.
+        """
+        sb = self._seqs[seq_id]
+        full = sb.num_tokens // self.block_size
+        return [
+            (i, sb.device_blocks[i])
+            for i in range(min(full, len(sb.device_blocks)))
+            if sb.host_blocks[i] < 0
+        ]
+
+    def assign_checkpoint(self, seq_id: int, block_index: int) -> Tuple[int, int]:
+        """Reserve a host block for device block ``block_index`` of the seq.
+        Returns (device_block, host_block) — the engine performs the copy."""
+        sb = self._seqs[seq_id]
+        if sb.host_blocks[block_index] >= 0:
+            raise ValueError("block already checkpointed")
+        if not self._free_host:
+            raise OutOfBlocks("host pool exhausted")
+        hb = self._free_host.pop()
+        sb.host_blocks[block_index] = hb
+        return sb.device_blocks[block_index], hb
+
+    def checkpoint_fraction(self, seq_id: int) -> float:
+        sb = self._seqs[seq_id]
+        full = max(1, sb.num_tokens // self.block_size)
+        return min(1.0, sb.num_checkpointed / full)
+
+    def is_fully_checkpointed(self, seq_id: int) -> bool:
+        sb = self._seqs[seq_id]
+        full = sb.num_tokens // self.block_size
+        return all(h >= 0 for h in sb.host_blocks[:full])
+
+    # ------------------------------------------------------------ preemption
+    def preempt_discard(self, seq_id: int) -> Tuple[int, List[Tuple[int, int]]]:
+        """Preempt by discard: free all device blocks instantly.
+
+        Blocks WITH host checkpoints survive (resume = swap-in); tokens in
+        un-checkpointed blocks must be recomputed.  Returns
+        (tokens_to_recompute, freed device blocks as (idx, block)).
+        """
+        sb = self._seqs[seq_id]
+        freed = list(enumerate(sb.device_blocks))
+        for b in sb.device_blocks:
+            self._free_device.append(b)
+        # Tokens surviving in host memory: leading fully checkpointed prefix.
+        surviving = 0
+        full = sb.num_tokens // self.block_size
+        for i in range(full):
+            if sb.host_blocks[i] >= 0:
+                surviving += self.block_size
+            else:
+                break
+        # Host blocks beyond the contiguous prefix are useless — release them.
+        keep = surviving // self.block_size
+        for i, h in enumerate(sb.host_blocks):
+            if i >= keep and h >= 0:
+                self._free_host.append(h)
+                sb.host_blocks[i] = -1
+        recompute = sb.num_tokens - surviving
+        sb.device_blocks = []
+        sb.host_blocks = sb.host_blocks[:keep]
+        sb.on_device = False
+        return recompute, freed
+
+    def swap_out_bytes_needed(self, seq_id: int, bytes_per_block: int) -> int:
+        """Bytes a *blocking* swap-out would move (un-checkpointed complete
+        blocks + the partial tail).  ConServe's IC drives this toward 0."""
+        sb = self._seqs[seq_id]
+        full = sb.num_tokens // self.block_size
+        unck = sum(1 for h in sb.host_blocks[:full] if h < 0)
+        partial = 1 if sb.num_tokens % self.block_size else 0
+        return (unck + partial) * bytes_per_block
+
+    def preempt_swap_out(self, seq_id: int) -> List[Tuple[int, int]]:
+        """Preempt by full swap-out: every device block gets a host copy
+        (reusing existing checkpoints), then device blocks are freed.
+        Returns (device_block, host_block) copies the engine must perform.
+        Atomic: raises OutOfBlocks (without mutating) if the host pool
+        cannot take the un-checkpointed blocks — callers fall back to
+        discard, as vLLM does."""
+        sb = self._seqs[seq_id]
+        need = sum(1 for h in sb.host_blocks if h < 0)
+        if need > len(self._free_host):
+            raise OutOfBlocks("host pool exhausted during swap-out")
+        copies = []
+        for i, db in enumerate(sb.device_blocks):
+            if sb.host_blocks[i] < 0:
+                sb.host_blocks[i] = self._free_host.pop()
+                copies.append((db, sb.host_blocks[i]))
+        for b in sb.device_blocks:
+            self._free_device.append(b)
+        sb.device_blocks = []
+        sb.on_device = False
+        return copies
+
+    # ---------------------------------------------------------------- resume
+    def can_resume(self, seq_id: int) -> bool:
+        sb = self._seqs[seq_id]
+        need = self.blocks_for_tokens(sb.num_tokens)
+        return need <= len(self._free_device)
+
+    def resume(self, seq_id: int) -> List[Tuple[int, int]]:
+        """Re-allocate device blocks for a host-resident sequence.
+        Returns (host_block, device_block) swap-in copies to perform."""
+        sb = self._seqs[seq_id]
+        if sb.on_device:
+            raise ValueError(f"seq {seq_id} already resident")
+        kept_tokens = len(sb.host_blocks) * self.block_size
+        kept_tokens = min(kept_tokens, sb.num_tokens)
+        need = self.blocks_for_tokens(sb.num_tokens)
+        if need > len(self._free_device):
+            raise OutOfBlocks("cannot resume: device pool exhausted")
+        sb.device_blocks = [self._free_device.pop() for _ in range(need)]
+        copies = [
+            (hb, sb.device_blocks[i])
+            for i, hb in enumerate(sb.host_blocks)
+            if hb >= 0
+        ]
+        sb.host_blocks = [
+            sb.host_blocks[i] if i < len(sb.host_blocks) else -1
+            for i in range(need)
+        ]
+        sb.on_device = True
+        return copies
+
+    def tokens_resident(self, seq_id: int) -> int:
+        """Tokens whose KV is on device (== num_tokens when resident)."""
+        sb = self._seqs[seq_id]
+        if sb.on_device:
+            return sb.num_tokens
+        return 0
+
+    def tokens_recoverable_from_host(self, seq_id: int) -> int:
+        sb = self._seqs[seq_id]
+        n = 0
+        for h in sb.host_blocks:
+            if h >= 0:
+                n += self.block_size
+            else:
+                break
+        return min(n, sb.num_tokens)
+
+    # ------------------------------------------------------------------ free
+    def free_seq(self, seq_id: int) -> None:
+        sb = self._seqs.pop(seq_id)
+        for b in sb.device_blocks:
+            self._free_device.append(b)
+        for h in sb.host_blocks:
+            if h >= 0:
+                self._free_host.append(h)
+
+    # ------------------------------------------------------------ invariants
+    def check_invariants(self) -> None:
+        """Raises AssertionError on any accounting violation (tests)."""
+        seen: Set[int] = set(self._free_device)
+        assert len(seen) == len(self._free_device), "free device list has dups"
+        for sb in self._seqs.values():
+            for b in sb.device_blocks:
+                assert b not in seen, f"device block {b} double-owned"
+                seen.add(b)
+            if sb.on_device:
+                assert len(sb.device_blocks) == self.blocks_for_tokens(
+                    sb.num_tokens
+                ), f"seq {sb.seq_id}: block count != token count"
+            else:
+                assert not sb.device_blocks
+        assert len(seen) == self.num_device_blocks, "device blocks leaked"
+
+        hseen: Set[int] = set(self._free_host)
+        assert len(hseen) == len(self._free_host), "free host list has dups"
+        for sb in self._seqs.values():
+            for h in sb.host_blocks:
+                if h >= 0:
+                    assert h not in hseen, f"host block {h} double-owned"
+                    hseen.add(h)
+        assert len(hseen) == self.num_host_blocks, "host blocks leaked"

@@ -1,0 +1,86 @@
+"""JAX ops over the *paged* physical KV layout.
+
+Physical pool per layer: ``k_pool, v_pool: (num_blocks, block_size, Hkv, D)``.
+Sequences address it through ``block_tables: (B, max_blocks_per_seq) int32``
+(-1 padded) + ``seq_lens: (B,)``.
+
+These ops are the pure-jnp oracle for the Pallas ``paged_attention`` kernel
+and the physical half of the block manager's accounting.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def append_paged(
+    k_pool: jnp.ndarray,
+    v_pool: jnp.ndarray,
+    k_new: jnp.ndarray,  # (B, Hkv, D) — one token per sequence
+    v_new: jnp.ndarray,
+    block_tables: jnp.ndarray,  # (B, M)
+    seq_lens: jnp.ndarray,  # (B,) length BEFORE the append
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Scatter one new token per sequence into its tail block."""
+    bs = k_pool.shape[1]
+    block_idx = seq_lens // bs
+    offset = seq_lens % bs
+    rows = jnp.take_along_axis(block_tables, block_idx[:, None], axis=1)[:, 0]
+    k_pool = k_pool.at[rows, offset].set(k_new)
+    v_pool = v_pool.at[rows, offset].set(v_new)
+    return k_pool, v_pool
+
+
+def gather_paged(
+    pool: jnp.ndarray,  # (num_blocks, bs, Hkv, D)
+    block_tables: jnp.ndarray,  # (B, M)
+    max_ctx: int,
+) -> jnp.ndarray:
+    """Gather per-sequence contiguous KV (B, max_ctx, Hkv, D)."""
+    bs = pool.shape[1]
+    m = max_ctx // bs
+    tables = block_tables[:, :m]  # (B, m)
+    safe = jnp.maximum(tables, 0)
+    gathered = pool[safe]  # (B, m, bs, Hkv, D)
+    gathered = jnp.where(
+        (tables >= 0)[:, :, None, None, None], gathered, 0
+    )
+    b = tables.shape[0]
+    return gathered.reshape(b, m * bs, *pool.shape[2:])
+
+
+def paged_attention_ref(
+    q: jnp.ndarray,  # (B, H, D) — single decode token per sequence
+    k_pool: jnp.ndarray,  # (num_blocks, bs, Hkv, D)
+    v_pool: jnp.ndarray,
+    block_tables: jnp.ndarray,  # (B, M)
+    seq_lens: jnp.ndarray,  # (B,) tokens valid in the cache (incl. current)
+) -> jnp.ndarray:
+    """Oracle decode attention over the paged pool. Returns (B, H, D)."""
+    b, h, d = q.shape
+    bs = k_pool.shape[1]
+    m = block_tables.shape[1]
+    max_ctx = m * bs
+    k = gather_paged(k_pool, block_tables, max_ctx)  # (B, T, Hkv, D)
+    v = gather_paged(v_pool, block_tables, max_ctx)
+    hkv = k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, d).astype(jnp.float32)
+    scores = jnp.einsum("bhgd,bthd->bhgt", qg, k.astype(jnp.float32)) * d**-0.5
+    valid = jnp.arange(max_ctx)[None, :] < seq_lens[:, None]  # (B, T)
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgt,bthd->bhgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+def checkpoint_gather_ref(
+    pool: jnp.ndarray,  # (num_blocks, bs, Hkv, D)
+    block_ids: jnp.ndarray,  # (N,) device blocks to checkpoint
+) -> jnp.ndarray:
+    """Oracle for the incremental-checkpoint delta gather: pack the selected
+    blocks into a dense staging buffer (N, bs, Hkv, D) for one contiguous
+    device→host DMA."""
+    return pool[block_ids]

@@ -1,0 +1,272 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+on the production meshes, extract memory / cost / collective analyses.
+
+This proves the distribution config is coherent without real hardware:
+sharding mismatches, compile-time OOM and unsupported collectives all fail
+here.  Results feed EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch mamba2-1.3b --shape decode_32k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.core.profiler import kv_bytes_per_token, ssm_state_bytes
+from repro.distributed import sharding as shd
+from repro.launch import specs
+from repro.launch.hlo_analysis import rollup
+from repro.launch.mesh import make_production_mesh
+from repro.models.config import INPUT_SHAPES, ModelConfig, shape_applicable
+
+# TPU v5e hardware constants for the roofline terms (DESIGN.md §3).
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+ICI_BW = 50e9  # bytes/s / link
+
+
+def analytic_hbm_bytes(
+    cfg: ModelConfig, shape, kind: str, mesh_shape: Dict[str, int]
+) -> float:
+    """Per-chip HBM traffic estimate for one step.
+
+    The CPU-lowered HLO exposes flash-attention block intermediates as
+    top-level buffers that live in VMEM on TPU, so text-derived byte counts
+    wildly overstate TPU HBM traffic; this analytic model is the TPU-real
+    memory term (weights + KV/state traffic + activation I/O).
+    """
+    tp = mesh_shape.get("model", 1)
+    dp = mesh_shape.get("data", 1) * mesh_shape.get("pod", 1)
+    p_active = cfg.active_param_count()
+    weights = 2.0 * p_active / tp  # bf16 read once per step per chip
+    tokens_local = shape.global_batch * (
+        shape.seq_len if kind != "decode" else 1
+    ) / dp
+    kv_tok = kv_bytes_per_token(cfg)
+    act = tokens_local * cfg.d_model * 2 * cfg.num_layers * 8  # rough I/O
+
+    if kind == "train":
+        # fwd + remat-fwd + bwd weight reads, fp32 grad write + AdamW state
+        opt = 12.0 * p_active / (tp * dp)
+        logits = tokens_local * cfg.vocab_size / tp * 4 * 3
+        return 3 * weights + 4.0 * p_active / tp + opt + 3 * act + logits
+
+    if kind == "prefill":
+        # flash attention re-reads K/V once per q-block
+        ctx = min(shape.seq_len, cfg.sliding_window or shape.seq_len)
+        nq = max(1, shape.seq_len // 512)
+        kv_total = kv_tok * shape.global_batch * ctx / dp
+        kv_traffic = kv_total * min(nq, max(1, ctx // 1024)) * 0.5
+        return weights + kv_total + kv_traffic + act
+
+    # decode: weights + full KV read (+ SSM state read/write)
+    ctx = min(shape.seq_len, cfg.sliding_window or shape.seq_len)
+    kv_read = kv_tok * shape.global_batch * ctx / dp
+    ssm = 2.0 * ssm_state_bytes(cfg) * shape.global_batch / dp
+    return weights + kv_read + ssm + act
+
+
+def model_flops(cfg: ModelConfig, shape, kind: str) -> float:
+    """MODEL_FLOPS = 6·N_active·D (train) or 2·N_active·D (inference)."""
+    n = cfg.active_param_count()
+    if kind == "train":
+        d = shape.global_batch * shape.seq_len
+        return 6.0 * n * d
+    if kind == "prefill":
+        d = shape.global_batch * shape.seq_len
+        return 2.0 * n * d
+    d = shape.global_batch  # decode: one token per sequence
+    return 2.0 * n * d
+
+
+def run_combo(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    verbose: bool = True,
+) -> Dict:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    result: Dict = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "status": "ok",
+    }
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        result.update(status="skipped", reason=why)
+        if verbose:
+            print(f"[skip] {arch} × {shape_name}: {why}")
+        return result
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = 1
+    for v in mesh.shape.values():
+        chips *= v
+    t0 = time.time()
+
+    from repro.distributed.act_sharding import activation_sharding
+
+    p_spec = specs.params_spec(cfg)
+    p_shard = shd.params_shardings(p_spec, mesh)
+    weights_fsdp = (
+        shd.params_weight_bytes(p_spec) / shd.mesh_axis_size(mesh, "model")
+        > shd.FSDP_WEIGHT_THRESHOLD
+    )
+    with mesh, activation_sharding(
+        mesh, batch_axes=shd.batch_axes(mesh), decode_dshard=weights_fsdp
+    ):
+        if shape.kind == "train":
+            o_spec = specs.opt_state_spec(cfg)
+            b_spec = specs.batch_spec(cfg, shape)
+            fn = specs.build_train_step(cfg, acc_shardings=p_shard)
+            in_sh = (
+                p_shard,
+                shd.opt_state_shardings(p_shard, mesh),
+                shd.batch_shardings(b_spec, mesh),
+            )
+            lowered = jax.jit(
+                fn, in_shardings=in_sh, donate_argnums=(0, 1)
+            ).lower(p_spec, o_spec, b_spec)
+        elif shape.kind == "prefill":
+            b_spec = specs.batch_spec(cfg, shape)
+            fn = specs.build_prefill_step(cfg, shape)
+            in_sh = (p_shard, shd.batch_shardings(b_spec, mesh))
+            lowered = jax.jit(fn, in_shardings=in_sh).lower(p_spec, b_spec)
+        else:  # decode
+            d_spec = specs.decode_spec(cfg, shape)
+            fn = specs.build_decode_step(cfg)
+            # FSDP-weight models: decode activations are tiny (B tokens) —
+            # REPLICATE them, since batch-over-data conflicts with the
+            # weights' d-over-data sharding (§Perf hillclimb #3).  TP-only
+            # models keep the plain batch sharding (replicating regressed
+            # yi-34b decode 5x).  KV caches stay batch-sharded either way.
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            tok_sh = (
+                NamedSharding(mesh, P())
+                if weights_fsdp
+                else shd.batch_shardings(d_spec["last_tokens"], mesh)
+            )
+            in_sh = (
+                p_shard,
+                tok_sh,
+                shd.cache_shardings(d_spec["caches"], mesh),
+                tok_sh,
+            )
+            lowered = jax.jit(fn, in_shardings=in_sh, donate_argnums=(2,)).lower(
+                p_spec,
+                d_spec["last_tokens"],
+                d_spec["caches"],
+                d_spec["seq_lens"],
+            )
+        compiled = lowered.compile()
+
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    # Loop-corrected per-device costs from the compiled HLO (cost_analysis
+    # counts scan bodies once — see hlo_analysis.py).
+    rolled = rollup(hlo)
+    flops = float(rolled["flops"])
+    coll = {k: float(v) for k, v in rolled["collectives"].items()}
+    coll_total = float(rolled["collective_bytes"])
+    raw_cost = compiled.cost_analysis()
+    mf = model_flops(cfg, shape, shape.kind)
+    mesh_shape = dict(mesh.shape)
+    hbm_bytes = analytic_hbm_bytes(cfg, shape, shape.kind, mesh_shape)
+
+    t_compute = flops / PEAK_FLOPS
+    t_memory = hbm_bytes / HBM_BW
+    t_collective = coll_total / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_collective}
+    bottleneck = max(terms, key=terms.get)
+
+    result.update(
+        chips=chips,
+        compile_s=round(t_compile, 2),
+        flops_per_device=flops,
+        flops_per_device_loop_once=float(raw_cost.get("flops", 0.0)),
+        hbm_bytes_per_device=hbm_bytes,
+        hbm_bytes_hlo_upper_bound=float(rolled["hbm_bytes"]),
+        collective_bytes_per_device=coll_total,
+        collectives=coll,
+        memory={
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+        },
+        roofline_seconds=terms,
+        bottleneck=bottleneck,
+        model_flops_total=mf,
+        model_flops_per_chip=mf / chips,
+        useful_flops_ratio=(mf / chips) / flops if flops else None,
+    )
+    if verbose:
+        print(
+            f"[ok] {arch} × {shape_name} × {result['mesh']}: "
+            f"compile {t_compile:.1f}s, "
+            f"compute {t_compute*1e3:.2f}ms / mem {t_memory*1e3:.2f}ms / "
+            f"coll {t_collective*1e3:.2f}ms -> {bottleneck}-bound, "
+            f"useful {result['useful_flops_ratio'] and round(result['useful_flops_ratio'],3)}"
+        )
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", action="append", default=None)
+    ap.add_argument("--shape", action="append", default=None)
+    ap.add_argument("--mesh", choices=["pod1", "pod2", "both"], default="pod1")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--fail-fast", action="store_true")
+    args = ap.parse_args()
+
+    archs = args.arch or (ASSIGNED_ARCHS if args.all else ["llama-2-7b"])
+    shapes = args.shape or list(INPUT_SHAPES)
+    meshes = {"pod1": [False], "pod2": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for arch in archs:
+        for shape_name in shapes:
+            for multi_pod in meshes:
+                tag = f"{arch}_{shape_name}_{'2x16x16' if multi_pod else '16x16'}"
+                try:
+                    res = run_combo(arch, shape_name, multi_pod)
+                except Exception as e:  # noqa: BLE001
+                    res = {
+                        "arch": arch,
+                        "shape": shape_name,
+                        "mesh": "2x16x16" if multi_pod else "16x16",
+                        "status": "error",
+                        "error": f"{type(e).__name__}: {e}",
+                    }
+                    failures.append(tag)
+                    print(f"[FAIL] {tag}: {e}")
+                    if args.fail_fast:
+                        traceback.print_exc()
+                        raise
+                with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                    json.dump(res, f, indent=2, default=str)
+    print(f"\ndone; {len(failures)} failures: {failures}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,21 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never touches
+JAX device state (the dry-run must set XLA_FLAGS before first init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips with a leading 'pod'
+    axis (outer data-parallel)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh for CPU tests (uses however many devices exist)."""
+    return jax.make_mesh((data, model), ("data", "model"))

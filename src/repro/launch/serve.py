@@ -1,0 +1,109 @@
+"""Serving launcher — the paper's kind of driver.
+
+Two modes:
+  real  — run the real-execution engine on CPU with a REDUCED variant of the
+          chosen architecture (true JAX compute; used by examples/tests).
+  sim   — run the full-scale config under the calibrated discrete-event
+          cost model (policy evaluation; used by the benchmarks).
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.serve --arch llama-2-7b --mode sim \
+      --duration 120 --rate 2 --offline 500
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --mode real \
+      --online 4 --offline 8 --max-new 16
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+
+def run_sim(args) -> None:
+    from repro.configs import get_config
+    from repro.core.profiler import A100_40G, TPU_V5E
+    from repro.core.scheduler import SchedulerConfig
+    from repro.core.slo import SLO
+    from repro.serving import loadgen
+    from repro.serving.engine import EngineConfig, SimEngine
+
+    hw = TPU_V5E if args.hw == "v5e" else A100_40G
+    eng = SimEngine(
+        get_config(args.arch), SLO(args.ttft, args.tpot),
+        SchedulerConfig(), EngineConfig(), hw=hw, tp=args.tp,
+    )
+    rng = np.random.default_rng(args.seed)
+    times = loadgen.gamma_arrivals(args.rate, args.cv, args.duration, rng)
+    eng.submit(loadgen.make_online_requests(
+        times, loadgen.LengthSpec(args.prompt_len, args.max_new), rng))
+    eng.submit(loadgen.make_offline_batch(
+        args.offline, loadgen.LengthSpec(2 * args.prompt_len, 2 * args.max_new),
+        np.random.default_rng(args.seed + 1)))
+    m = eng.run(args.duration)
+    print(f"arch={args.arch} hw={hw.name} tp={args.tp}")
+    print(f"p99 TTFT {m.p99_ttft*1e3:.0f} ms   p99 TPOT {m.p99_tpot*1e3:.1f} ms")
+    print(f"throughput {m.throughput_tokens_per_s:.0f} tok/s "
+          f"(online {m.online_throughput:.0f}, offline {m.offline_throughput:.0f})")
+    print(f"SLO attainment: TTFT {m.ttft_slo_attainment:.3f} "
+          f"TPOT {m.tpot_slo_attainment:.3f}; preemptions {m.num_preemptions}; "
+          f"free discards {eng.ckpt.stats.free_discards}")
+
+
+def run_real(args) -> None:
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import transformer as tf
+    from repro.serving.api import Frontend
+    from repro.serving.real_engine import RealEngine
+
+    cfg = get_config(args.arch).reduced()
+    params = tf.init_params(cfg, jax.random.PRNGKey(args.seed))
+    eng = RealEngine(cfg, params)
+    fe = Frontend(eng)
+    rng = np.random.default_rng(args.seed)
+
+    streams = [
+        fe.stream(
+            rng.integers(0, cfg.vocab_size, args.prompt_len // 8).astype(np.int32),
+            args.max_new,
+        )
+        for _ in range(args.online)
+    ]
+    job = fe.submit_batch(
+        [rng.integers(0, cfg.vocab_size, args.prompt_len // 4).astype(np.int32)
+         for _ in range(args.offline)],
+        max_new_tokens=args.max_new,
+    )
+    eng.run()
+    print(f"arch={cfg.name} (reduced) — real execution on {jax.default_backend()}")
+    for i, h in enumerate(streams):
+        print(f"stream {i}: {h.poll()}")
+    print(f"batch job done={job.done} progress={job.progress:.0%}")
+    print(f"engine steps={eng.steps} preemptions="
+          f"{sum(r.num_preemptions for r in eng.sched.all_requests())} "
+          f"ckpt_blocks={eng.ckpt.stats.blocks_checkpointed}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama-2-7b")
+    ap.add_argument("--mode", choices=["sim", "real"], default="sim")
+    ap.add_argument("--duration", type=float, default=120.0)
+    ap.add_argument("--rate", type=float, default=2.0)
+    ap.add_argument("--cv", type=float, default=1.0)
+    ap.add_argument("--offline", type=int, default=500)
+    ap.add_argument("--online", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=1024)
+    ap.add_argument("--max-new", type=int, default=128)
+    ap.add_argument("--ttft", type=float, default=1.5)
+    ap.add_argument("--tpot", type=float, default=0.110)
+    ap.add_argument("--hw", choices=["v5e", "a100"], default="v5e")
+    ap.add_argument("--tp", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    (run_sim if args.mode == "sim" else run_real)(args)
+
+
+if __name__ == "__main__":
+    main()

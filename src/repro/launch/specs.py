@@ -1,0 +1,111 @@
+"""ShapeDtypeStruct input specs + step-function builders for every
+(architecture × input shape) combination — the dry-run lowers these.
+
+No device allocation happens here: params/opt/caches come from
+``jax.eval_shape`` over the real init functions, so the specs always match
+what the runtime would build.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tf
+from repro.models.config import InputShape, ModelConfig
+from repro.training import optimizer as opt
+from repro.training.train_loop import make_train_step
+
+PyTree = Any
+SDS = jax.ShapeDtypeStruct
+
+
+def params_spec(cfg: ModelConfig, dtype=jnp.bfloat16) -> PyTree:
+    return jax.eval_shape(
+        lambda: tf.init_params(cfg, jax.random.PRNGKey(0), dtype)
+    )
+
+
+def opt_state_spec(cfg: ModelConfig, dtype=jnp.bfloat16) -> PyTree:
+    return jax.eval_shape(lambda: opt.init(tf.init_params(cfg, jax.random.PRNGKey(0), dtype)))
+
+
+def batch_spec(cfg: ModelConfig, shape: InputShape, dtype=jnp.bfloat16) -> Dict:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.embed_inputs:
+        spec = {"tokens": SDS((b, s), jnp.int32)}
+    else:  # audio: precomputed frame embeddings from the stubbed frontend
+        spec = {"tokens": SDS((b, s, cfg.d_model), dtype)}
+    if shape.kind == "train":
+        spec["labels"] = SDS((b, s), jnp.int32)
+    if cfg.vision_dim:
+        spec["image_embeds"] = SDS(
+            (b, cfg.num_image_tokens, cfg.vision_dim), dtype
+        )
+    return spec
+
+
+def cache_spec(cfg: ModelConfig, shape: InputShape, dtype=jnp.bfloat16) -> PyTree:
+    return jax.eval_shape(
+        lambda: tf.init_caches(cfg, shape.global_batch, shape.seq_len, dtype)
+    )
+
+
+def decode_spec(cfg: ModelConfig, shape: InputShape, dtype=jnp.bfloat16) -> Dict:
+    b = shape.global_batch
+    return {
+        "last_tokens": SDS((b,), jnp.int32),
+        "caches": cache_spec(cfg, shape, dtype),
+        "seq_lens": SDS((b,), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+
+def build_train_step(
+    cfg: ModelConfig, grad_accum: int = 8, acc_shardings=None
+) -> Callable:
+    """train_step(params, opt_state, batch) with remat (activation ckpt) and
+    gradient accumulation (microbatching) — the production configuration."""
+    return make_train_step(
+        cfg, remat=True, grad_accum=grad_accum, acc_shardings=acc_shardings
+    )
+
+
+def build_prefill_step(cfg: ModelConfig, shape: InputShape) -> Callable:
+    """serve_step for prefill shapes: full forward emitting KV caches (or a
+    plain encode for encoder-only archs)."""
+
+    emit = cfg.supports_decode and cfg.has_kv_cache or cfg.has_ssm_state
+
+    def prefill_step(params, batch):
+        logits, caches, _ = tf.forward_full(
+            cfg,
+            params,
+            batch["tokens"],
+            image_embeds=batch.get("image_embeds"),
+            emit_caches=cfg.supports_decode,
+            max_seq=shape.seq_len,
+            capacity_factor=1.25,
+            cache_dtype=jnp.bfloat16,
+        )
+        last = logits[:, -1, :]
+        return (last, caches) if caches is not None else last
+
+    return prefill_step
+
+
+def build_decode_step(cfg: ModelConfig) -> Callable:
+    """serve_step for decode shapes: ONE new token against the KV cache."""
+
+    def decode_step(params, last_tokens, caches, seq_lens):
+        return tf.decode_step(
+            cfg, params, last_tokens, caches, seq_lens, capacity_factor=1.25
+        )
+
+    return decode_step

@@ -1,0 +1,55 @@
+"""Training launcher: runs a reduced variant of any assigned architecture on
+the local device(s), with checkpointing.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --steps 200
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama-2-7b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the production config (multi-host only)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.training import checkpoint_io, optimizer as opt
+    from repro.training.data import DataConfig, SyntheticTokens
+    from repro.training.train_loop import train
+
+    cfg = get_config(args.arch)
+    if not args.full_config:
+        cfg = cfg.reduced(
+            num_layers=max(2 * cfg.pattern_period, 4 * cfg.pattern_period)
+        )
+    print(f"training {cfg.name}: {cfg.param_count():,} params on "
+          f"{jax.default_backend()}")
+    data = SyntheticTokens(
+        cfg, DataConfig(args.batch_size, args.seq_len, args.seed)
+    )
+    res = train(
+        cfg, iter(data), args.steps,
+        opt.AdamWConfig(lr=args.lr, total_steps=args.steps),
+        key=jax.random.PRNGKey(args.seed),
+    )
+    print(f"loss: {res.losses[0]:.4f} -> {res.losses[-1]:.4f}")
+    if args.ckpt:
+        os.makedirs(os.path.dirname(args.ckpt) or ".", exist_ok=True)
+        checkpoint_io.save(args.ckpt, res.params, step=args.steps)
+        print(f"saved {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

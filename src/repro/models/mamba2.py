@@ -1,0 +1,245 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) mixer.
+
+Full-sequence path uses the chunked SSD algorithm: quadratic attention-like
+matmuls *within* chunks of length ``ssm_chunk`` (MXU-friendly) and a linear
+``lax.scan`` over chunk states *between* chunks.  Decode path is the O(1)
+recurrence.  Both carry an explicit ``(ssm_state, conv_state)`` pair — the
+ConServe checkpointing target for SSM layers (constant-size per sequence,
+see DESIGN.md §4).
+
+Single B/C group (ngroups=1), scalar-per-head A, as in the Mamba-2 paper's
+default configuration.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import rmsnorm
+
+Params = Dict[str, jnp.ndarray]
+
+
+class MambaState(NamedTuple):
+    ssm: jnp.ndarray  # (B, nh, hd, dstate) fp32
+    conv: jnp.ndarray  # (B, conv_width-1, conv_channels)
+
+
+def conv_channels(cfg: ModelConfig) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_state_size
+
+
+def init_mamba(cfg: ModelConfig, key: jax.Array, dtype) -> Params:
+    d, d_in, nh, ds = cfg.d_model, cfg.d_inner, cfg.ssm_num_heads, cfg.ssm_state_size
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    proj_out = 2 * d_in + 2 * ds + nh  # z, x, B, C, dt
+    p = {
+        "in_proj": jax.random.normal(k1, (d, proj_out), dtype) * d**-0.5,
+        "conv_w": jax.random.normal(k2, (cfg.ssm_conv_width, conv_channels(cfg)), dtype)
+        * cfg.ssm_conv_width**-0.5,
+        "conv_b": jnp.zeros((conv_channels(cfg),), dtype),
+        "A_log": jnp.log(
+            jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)
+        ),  # A = -exp(A_log)
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm_w": jnp.ones((d_in,), dtype),
+        "out_proj": jax.random.normal(k4, (d_in, d), dtype) * d_in**-0.5,
+    }
+    return p
+
+
+def zero_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> MambaState:
+    return MambaState(
+        ssm=jnp.zeros(
+            (batch, cfg.ssm_num_heads, cfg.ssm_head_dim, cfg.ssm_state_size),
+            jnp.float32,
+        ),
+        conv=jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_channels(cfg)), dtype),
+    )
+
+
+def _split_proj(cfg: ModelConfig, proj: jnp.ndarray):
+    d_in, ds, nh = cfg.d_inner, cfg.ssm_state_size, cfg.ssm_num_heads
+    z = proj[..., :d_in]
+    xBC = proj[..., d_in : 2 * d_in + 2 * ds]
+    dt_raw = proj[..., 2 * d_in + 2 * ds :]
+    return z, xBC, dt_raw
+
+
+def _causal_conv_full(
+    cfg: ModelConfig, p: Params, xBC: jnp.ndarray, conv_init: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv over time. xBC: (B,T,C); conv_init: (B,W-1,C)."""
+    w = cfg.ssm_conv_width
+    padded = jnp.concatenate([conv_init.astype(xBC.dtype), xBC], axis=1)
+    out = jnp.zeros_like(xBC)
+    t = xBC.shape[1]
+    for i in range(w):
+        out = out + padded[:, i : i + t, :] * p["conv_w"][i]
+    out = jax.nn.silu(out + p["conv_b"])
+    new_conv = padded[:, -(w - 1) :, :] if w > 1 else padded[:, :0, :]
+    return out, new_conv
+
+
+def _ssd_chunked(
+    cfg: ModelConfig,
+    xh: jnp.ndarray,  # (B,T,nh,hd)
+    dt: jnp.ndarray,  # (B,T,nh) fp32, post-softplus
+    A: jnp.ndarray,  # (nh,) fp32, negative
+    Bm: jnp.ndarray,  # (B,T,ds)
+    Cm: jnp.ndarray,  # (B,T,ds)
+    h0: jnp.ndarray,  # (B,nh,hd,ds) fp32
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD. Returns (y (B,T,nh,hd), final state)."""
+    b, t, nh, hd = xh.shape
+    ds = Bm.shape[-1]
+    L = min(cfg.ssm_chunk, t)
+    pad = (-t) % L
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    tp = t + pad
+    nc = tp // L
+
+    f32 = jnp.float32
+    xc = xh.reshape(b, nc, L, nh, hd).astype(f32)
+    dtc = dt.reshape(b, nc, L, nh)
+    bc = Bm.reshape(b, nc, L, ds).astype(f32)
+    cc = Cm.reshape(b, nc, L, ds).astype(f32)
+
+    a = dtc * A  # (B,Nc,L,nh) log-decay, <= 0
+    cum = jnp.cumsum(a, axis=2)  # inclusive
+
+    # ---- intra-chunk (quadratic within L) --------------------------------
+    # M[t,s] = exp(cum_t - cum_s) for s<=t.  Mask BEFORE exp: for s>t the
+    # difference is positive and can overflow, and a where() after exp still
+    # backpropagates inf*0=NaN through the dead branch.
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,Nc,L_t,L_s,nh)
+    causal = jnp.tril(jnp.ones((L, L), bool))
+    diff = jnp.where(causal[None, None, :, :, None], diff, -1e30)
+    M = jnp.exp(diff)
+    cb = jnp.einsum("bnts,bnms->bntm", cc, bc)  # (B,Nc,L_t,L_s)
+    scores = cb[:, :, :, :, None] * M * dtc[:, :, None, :, :]  # ×dt_s
+    y_intra = jnp.einsum("bntsh,bnshd->bnthd", scores, xc)
+
+    # ---- chunk states -----------------------------------------------------
+    # S_c = sum_s exp(cum_last - cum_s) dt_s B_s ⊗ x_s
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (B,Nc,L,nh)
+    weighted_x = xc * (dtc * decay_to_end)[..., None]  # (B,Nc,L,nh,hd)
+    S = jnp.einsum("bnshd,bnsk->bnhdk", weighted_x, bc)  # (B,Nc,nh,hd,ds)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (B,Nc,nh)
+
+    # ---- inter-chunk scan --------------------------------------------------
+    def step(h, inp):
+        s_c, dec_c = inp
+        h_out = h  # state entering this chunk
+        h_next = h * dec_c[:, :, None, None] + s_c
+        return h_next, h_out
+
+    S_t = jnp.moveaxis(S, 1, 0)  # (Nc,B,nh,hd,ds)
+    dec_t = jnp.moveaxis(chunk_decay, 1, 0)  # (Nc,B,nh)
+    h_final, h_enter = jax.lax.scan(step, h0.astype(f32), (S_t, dec_t))
+    h_enter = jnp.moveaxis(h_enter, 0, 1)  # (B,Nc,nh,hd,ds)
+
+    # ---- inter-chunk contribution ------------------------------------------
+    y_inter = jnp.einsum(
+        "bntk,bnhdk,bnth->bnthd", cc, h_enter, jnp.exp(cum)
+    )
+    y = (y_intra + y_inter).reshape(b, tp, nh, hd)[:, :t]
+    return y.astype(xh.dtype), h_final
+
+
+def mamba_full(
+    cfg: ModelConfig,
+    p: Params,
+    x: jnp.ndarray,
+    state: Optional[MambaState] = None,
+) -> Tuple[jnp.ndarray, MambaState]:
+    """Full-sequence mixer (train / prefill). x: (B,T,d_model)."""
+    b, t, _ = x.shape
+    if state is None:
+        state = zero_state(cfg, b, x.dtype)
+    proj = x @ p["in_proj"]
+    z, xBC, dt_raw = _split_proj(cfg, proj)
+    xBC, new_conv = _causal_conv_full(cfg, p, xBC, state.conv)
+
+    d_in, ds = cfg.d_inner, cfg.ssm_state_size
+    xs = xBC[..., :d_in]
+    Bm = xBC[..., d_in : d_in + ds]
+    Cm = xBC[..., d_in + ds :]
+
+    nh, hd = cfg.ssm_num_heads, cfg.ssm_head_dim
+    xh = xs.reshape(b, t, nh, hd)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    y, h_final = _ssd_chunked(cfg, xh, dt, A, Bm, Cm, state.ssm)
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(b, t, d_in).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    return out, MambaState(ssm=h_final, conv=new_conv)
+
+
+def mamba_full_ref(
+    cfg: ModelConfig,
+    p: Params,
+    x: jnp.ndarray,
+    state: Optional[MambaState] = None,
+) -> Tuple[jnp.ndarray, MambaState]:
+    """Sequential-scan oracle for the chunked SSD path (tests only)."""
+    b, t, _ = x.shape
+    if state is None:
+        state = zero_state(cfg, b, x.dtype)
+    outs = []
+    st = state
+    for i in range(t):
+        y, st = mamba_decode_step(cfg, p, x[:, i : i + 1, :], st)
+        outs.append(y)
+    return jnp.concatenate(outs, axis=1), st
+
+
+def mamba_decode_step(
+    cfg: ModelConfig,
+    p: Params,
+    x: jnp.ndarray,  # (B,1,d_model)
+    state: MambaState,
+) -> Tuple[jnp.ndarray, MambaState]:
+    """O(1) recurrence for one token."""
+    b = x.shape[0]
+    proj = x[:, 0, :] @ p["in_proj"]  # (B, proj_out)
+    z, xBC, dt_raw = _split_proj(cfg, proj)
+
+    # conv update
+    w = cfg.ssm_conv_width
+    window = jnp.concatenate(
+        [state.conv.astype(xBC.dtype), xBC[:, None, :]], axis=1
+    )  # (B,W,C)
+    conv_out = jnp.einsum("bwc,wc->bc", window, p["conv_w"]) + p["conv_b"]
+    xBC = jax.nn.silu(conv_out)
+    new_conv = window[:, 1:, :] if w > 1 else window[:, :0, :]
+
+    d_in, ds = cfg.d_inner, cfg.ssm_state_size
+    xs = xBC[..., :d_in]
+    Bm = xBC[..., d_in : d_in + ds].astype(jnp.float32)
+    Cm = xBC[..., d_in + ds :].astype(jnp.float32)
+
+    nh, hd = cfg.ssm_num_heads, cfg.ssm_head_dim
+    xh = xs.reshape(b, nh, hd).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,nh)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * A)  # (B,nh)
+
+    dBx = jnp.einsum("bh,bhd,bk->bhdk", dt, xh, Bm)
+    h = state.ssm * decay[:, :, None, None] + dBx
+    y = jnp.einsum("bk,bhdk->bhd", Cm, h) + xh * p["D"][None, :, None]
+    y = y.reshape(b, d_in).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = (y @ p["out_proj"])[:, None, :]
+    return out, MambaState(ssm=h, conv=new_conv)

@@ -1,0 +1,34 @@
+"""Token sampling: greedy / temperature / top-k.
+
+The serving integration tests use greedy sampling so preempt/resume runs are
+byte-identical to uninterrupted runs (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    temperature: float = 0.0  # 0 -> greedy
+    top_k: int = 0  # 0 -> no truncation
+    max_new_tokens: int = 128
+    stop_token: int = -1  # -1 -> never stop early
+
+
+def sample(
+    logits: jnp.ndarray,  # (B, V)
+    params: SamplingParams,
+    key: jax.Array,
+) -> jnp.ndarray:
+    """Returns next token ids (B,) int32."""
+    if params.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / params.temperature
+    if params.top_k:
+        kth = jax.lax.top_k(logits, params.top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,524 @@
+"""Composable decoder/encoder stack for every architecture family.
+
+The layer stack is a ``lax.scan`` over *periods* of the repeating layer
+pattern (see ``ModelConfig.layer_pattern``), keeping HLO compact enough to
+compile all 40 (arch × shape) dry-run combinations quickly.
+
+Three execution modes share the same per-layer code:
+
+* ``forward_full``   — whole-sequence forward (training / encoding /
+                       monolithic prefill); no cache needed, but *can emit*
+                       caches+states so it doubles as prefill.
+* ``prefill_chunk``  — chunked prefill against existing caches (ConServe
+                       uses chunked prefill to bound per-iteration latency).
+* ``decode_step``    — one-token decode against caches.
+
+Segmented execution for ConServe's layer-granularity preemption safepoints:
+``num_segments``/``run_segment`` splits the period scan into contiguous
+groups of ``safepoint_interval`` layers; the serving worker dispatches one
+segment at a time and checks the preemption flag between dispatches
+(DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import mamba2, moe as moe_mod
+from .config import (
+    FFN_DENSE,
+    FFN_MOE,
+    MIXER_ATTN,
+    MIXER_CROSS_ATTN,
+    MIXER_MAMBA,
+    ModelConfig,
+)
+from .layers import (
+    KVCache,
+    cached_attention,
+    cross_attention,
+    dense_attention,
+    init_attention,
+    init_mlp,
+    mlp,
+    project_cross_kv,
+    rmsnorm,
+)
+
+PyTree = Any
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_period(cfg: ModelConfig, key: jax.Array, dtype) -> Dict[str, PyTree]:
+    """Params for one period (all pattern positions)."""
+    pp: Dict[str, PyTree] = {}
+    pattern = cfg.layer_pattern()
+    keys = jax.random.split(key, len(pattern) * 2)
+    for i, spec in enumerate(pattern):
+        km, kf = keys[2 * i], keys[2 * i + 1]
+        layer: Dict[str, PyTree] = {
+            "norm1": jnp.ones((cfg.d_model,), dtype),
+            "norm2": jnp.ones((cfg.d_model,), dtype),
+        }
+        if spec.mixer in (MIXER_ATTN, MIXER_CROSS_ATTN):
+            layer["mixer"] = init_attention(cfg, km, dtype)
+        else:
+            layer["mixer"] = mamba2.init_mamba(cfg, km, dtype)
+        if spec.ffn == FFN_MOE:
+            layer["ffn"] = moe_mod.init_moe(cfg, kf, dtype)
+        elif cfg.d_ff:
+            layer["ffn"] = init_mlp(cfg, kf, dtype)
+        else:  # pure-SSM archs (Mamba-2) have no FFN sublayer
+            del layer["norm2"]
+        pp[str(i)] = layer
+    return pp
+
+
+def init_params(cfg: ModelConfig, key: jax.Array, dtype=jnp.float32) -> PyTree:
+    ke, kl, kh, kv = jax.random.split(key, 4)
+    params: Dict[str, PyTree] = {}
+    if cfg.embed_inputs:
+        params["embed"] = (
+            jax.random.normal(ke, (cfg.vocab_size, cfg.d_model), dtype) * 0.02
+        )
+    params["final_norm"] = jnp.ones((cfg.d_model,), dtype)
+    if not cfg.tie_embeddings or not cfg.embed_inputs:
+        params["lm_head"] = (
+            jax.random.normal(kh, (cfg.d_model, cfg.vocab_size), dtype)
+            * cfg.d_model**-0.5
+        )
+    if cfg.vision_dim:
+        params["vision_proj"] = (
+            jax.random.normal(kv, (cfg.vision_dim, cfg.d_model), dtype)
+            * cfg.vision_dim**-0.5
+        )
+    period_keys = jax.random.split(kl, cfg.num_periods)
+    params["layers"] = jax.vmap(lambda k: _init_period(cfg, k, dtype))(period_keys)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+
+def embed(cfg: ModelConfig, params: PyTree, inputs: jnp.ndarray) -> jnp.ndarray:
+    """tokens (B,T) int -> (B,T,d); or passthrough for embedded inputs."""
+    if cfg.embed_inputs:
+        return jnp.take(params["embed"], inputs, axis=0)
+    return inputs
+
+
+def lm_head(cfg: ModelConfig, params: PyTree, x: jnp.ndarray) -> jnp.ndarray:
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if "lm_head" in params:
+        logits = x @ params["lm_head"]
+    else:
+        logits = x @ params["embed"].T
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return logits.astype(jnp.float32)
+
+
+def project_image_embeds(
+    cfg: ModelConfig, params: PyTree, image_embeds: jnp.ndarray
+) -> jnp.ndarray:
+    return image_embeds @ params["vision_proj"]
+
+
+# ---------------------------------------------------------------------------
+# Cache / state construction
+# ---------------------------------------------------------------------------
+
+
+def cache_capacity(cfg: ModelConfig, max_seq: int) -> int:
+    return min(max_seq, cfg.sliding_window) if cfg.sliding_window else max_seq
+
+
+def init_caches(
+    cfg: ModelConfig,
+    batch: int,
+    max_seq: int,
+    dtype=jnp.float32,
+) -> Dict[str, PyTree]:
+    """Per-pattern-position cache/state pytrees, stacked over periods."""
+    caches: Dict[str, PyTree] = {}
+    hd = cfg.resolved_head_dim
+    np_ = cfg.num_periods
+    cap = cache_capacity(cfg, max_seq)
+
+    def stack(tree):
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (np_,) + a.shape), tree)
+
+    for i, spec in enumerate(cfg.layer_pattern()):
+        if spec.mixer == MIXER_ATTN:
+            caches[str(i)] = stack(
+                KVCache.init(batch, cap, cfg.num_kv_heads, hd, dtype)
+            )
+        elif spec.mixer == MIXER_CROSS_ATTN:
+            caches[str(i)] = stack(
+                {
+                    "ck": jnp.zeros((batch, cfg.num_image_tokens, cfg.num_kv_heads, hd), dtype),
+                    "cv": jnp.zeros((batch, cfg.num_image_tokens, cfg.num_kv_heads, hd), dtype),
+                }
+            )
+        else:  # mamba
+            st = mamba2.zero_state(cfg, batch, dtype)
+            caches[str(i)] = stack({"ssm": st.ssm, "conv": st.conv})
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# One layer
+# ---------------------------------------------------------------------------
+
+
+def _apply_layer(
+    cfg: ModelConfig,
+    spec,
+    lp: PyTree,
+    x: jnp.ndarray,
+    cache: Optional[PyTree],
+    *,
+    mode: str,  # "full" | "prefill" | "decode"
+    positions: jnp.ndarray,
+    valid: Optional[jnp.ndarray],
+    img_x: Optional[jnp.ndarray],
+    capacity_factor: float,
+) -> Tuple[jnp.ndarray, Optional[PyTree], jnp.ndarray]:
+    """Returns (x_out, new_cache, aux_loss).
+
+    Modes:
+      full    — whole sequence, no prior context (train / encode / monolithic
+                prefill for the dry-run).  Caches, if given, are *emitted*.
+      prefill — chunk with prior context in caches (ConServe chunked prefill).
+      decode  — one token against caches.
+    """
+    from repro.distributed.act_sharding import (
+        constrain_block_input,
+        constrain_residual,
+    )
+
+    aux = jnp.zeros((), jnp.float32)
+    h = rmsnorm(x, lp["norm1"], cfg.norm_eps)
+    if spec.mixer in (MIXER_ATTN, MIXER_CROSS_ATTN):
+        # Megatron seq-parallel: gather the sequence at the block entry so
+        # GSPMD gathers ~0.1GB activations instead of replicating multi-GB
+        # weights (confirmed 3-8x collective cut on dense archs).  Mamba
+        # mixers keep the sequence sharded — the SSD chunk scan is local in
+        # time and gathering regressed it (refuted, see EXPERIMENTS.md §Perf).
+        hd_ = cfg.resolved_head_dim
+        attn_w = 2 * cfg.d_model * (cfg.num_heads + 2 * cfg.num_kv_heads) * hd_ * 2
+        # heads that don't divide the model axis can't shard: must gather
+        from repro.distributed.act_sharding import model_axis_size
+
+        msz = model_axis_size()
+        force = bool(msz) and (
+            cfg.num_heads % msz != 0 or cfg.num_kv_heads % msz != 0
+        )
+        h = constrain_block_input(h, weight_bytes=attn_w, force=force)
+
+    if spec.mixer == MIXER_ATTN:
+        if mode == "full":
+            mix = dense_attention(cfg, lp["mixer"], h, positions)
+            new_cache = cache
+            if cache is not None:
+                # emit prefill caches: write the whole (roped) sequence
+                from .layers import apply_rope, project_qkv, write_kv
+
+                _, k, v = project_qkv(cfg, lp["mixer"], h)
+                k = apply_rope(k, positions, cfg.rope_theta)
+                new_cache = write_kv(cache, k, v, positions, valid)
+        else:  # prefill chunk or decode: attend through the cache
+            mix, new_cache = cached_attention(
+                cfg, lp["mixer"], h, cache, positions, valid
+            )
+    elif spec.mixer == MIXER_CROSS_ATTN:
+        if img_x is not None:  # first chunk / full pass: build static cross KV
+            ck, cv = project_cross_kv(cfg, lp["mixer"], img_x)
+            new_cache = {"ck": ck, "cv": cv} if cache is not None else cache
+        else:
+            ck, cv = cache["ck"], cache["cv"]
+            new_cache = cache
+        mix = cross_attention(cfg, lp["mixer"], h, ck, cv)
+    else:  # mamba
+        state = (
+            mamba2.MambaState(ssm=cache["ssm"], conv=cache["conv"])
+            if cache is not None
+            else None
+        )
+        if mode == "decode":
+            mix, new_state = mamba2.mamba_decode_step(cfg, lp["mixer"], h, state)
+        else:  # full or prefill: chunked SSD with carried state
+            mix, new_state = mamba2.mamba_full(cfg, lp["mixer"], h, state)
+        new_cache = (
+            {"ssm": new_state.ssm, "conv": new_state.conv}
+            if cache is not None
+            else None
+        )
+    x = x + mix
+
+    if "ffn" in lp:
+        h2 = rmsnorm(x, lp["norm2"], cfg.norm_eps)
+        if spec.ffn != FFN_MOE:
+            # dense MLPs benefit like attention does
+            mlp_w = 3 * cfg.d_model * cfg.d_ff * 2
+            h2 = constrain_block_input(h2, weight_bytes=mlp_w)
+        else:
+            # MoE dispatch must act on SHARDED tokens — the attention block
+            # above may have left the residual sequence-gathered, so re-shard
+            # before routing (gathered dispatch made every chip route the
+            # full batch: +13x FLOPs on Mixtral — refuted).
+            h2 = constrain_residual(h2)
+        if spec.ffn == FFN_MOE:
+            ffn_out, aux = moe_mod.moe_ffn(cfg, lp["ffn"], h2, capacity_factor)
+        else:
+            ffn_out = mlp(cfg, lp["ffn"], h2)
+        x = x + ffn_out
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Period scan
+# ---------------------------------------------------------------------------
+
+
+def run_periods(
+    cfg: ModelConfig,
+    layer_params: PyTree,  # leaves stacked over (a slice of) periods
+    x: jnp.ndarray,
+    *,
+    mode: str,
+    positions: jnp.ndarray,
+    caches: Optional[Dict[str, PyTree]] = None,  # leaves stacked same as params
+    valid: Optional[jnp.ndarray] = None,
+    img_x: Optional[jnp.ndarray] = None,
+    capacity_factor: float = 1.25,
+    remat: bool = False,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, PyTree]], jnp.ndarray]:
+    """Scan the pattern periods. Returns (x, new_caches, total_aux)."""
+    pattern = cfg.layer_pattern()
+
+    from repro.distributed.act_sharding import constrain_residual
+
+    def body(carry, per):
+        x, aux_tot = carry
+        x = constrain_residual(x)  # seq-parallel residual (no-op if inactive)
+        lp, cache_in = per
+        new_caches = {}
+        for i, spec in enumerate(pattern):
+            c_in = cache_in[str(i)] if cache_in is not None else None
+            x, c_out, aux = _apply_layer(
+                cfg,
+                spec,
+                lp[str(i)],
+                x,
+                c_in,
+                mode=mode,
+                positions=positions,
+                valid=valid,
+                img_x=img_x,
+                capacity_factor=capacity_factor,
+            )
+            if cache_in is not None:
+                new_caches[str(i)] = c_out
+        return (x, aux_tot + aux), (new_caches if cache_in is not None else 0)
+
+    fn = jax.checkpoint(body) if remat else body
+    (x, aux), new_caches = jax.lax.scan(
+        fn, (x, jnp.zeros((), jnp.float32)), (layer_params, caches)
+    )
+    return x, (new_caches if caches is not None else None), aux
+
+
+# ---------------------------------------------------------------------------
+# Top-level entry points
+# ---------------------------------------------------------------------------
+
+
+def forward_full(
+    cfg: ModelConfig,
+    params: PyTree,
+    inputs: jnp.ndarray,
+    *,
+    image_embeds: Optional[jnp.ndarray] = None,
+    emit_caches: bool = False,
+    max_seq: Optional[int] = None,
+    capacity_factor: float = 1.25,
+    remat: bool = False,
+    cache_dtype=None,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, PyTree]], jnp.ndarray]:
+    """Whole-sequence forward. Returns (logits, caches|None, aux_loss)."""
+    x = embed(cfg, params, inputs)
+    b, t = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+    img_x = (
+        project_image_embeds(cfg, params, image_embeds)
+        if image_embeds is not None
+        else None
+    )
+    caches = (
+        init_caches(cfg, b, max_seq or t, cache_dtype or x.dtype)
+        if emit_caches
+        else None
+    )
+    x, caches, aux = run_periods(
+        cfg,
+        params["layers"],
+        x,
+        mode="full",
+        positions=positions,
+        caches=caches,
+        img_x=img_x,
+        capacity_factor=capacity_factor,
+        remat=remat,
+    )
+    return lm_head(cfg, params, x), caches, aux
+
+
+def prefill_chunk(
+    cfg: ModelConfig,
+    params: PyTree,
+    tokens: jnp.ndarray,  # (B, L) chunk tokens
+    caches: Dict[str, PyTree],
+    offsets: jnp.ndarray,  # (B,) tokens already prefilled per sequence
+    *,
+    lengths: Optional[jnp.ndarray] = None,  # (B,) valid tokens in this chunk
+    image_embeds: Optional[jnp.ndarray] = None,
+    capacity_factor: float = -1.0,  # dropless by default (path-exact serving)
+) -> Tuple[jnp.ndarray, Dict[str, PyTree]]:
+    """Chunked prefill. Returns (last-token logits (B,V), new caches).
+
+    Mamba layers run the chunked SSD with carried state; attention layers
+    attend through the KV cache (exact for chunk_size <= sliding_window).
+
+    NOTE: for SSM/hybrid archs, ragged chunks (``lengths`` set with padding)
+    would contaminate the recurrent state — the serving engine therefore
+    prefills SSM sequences unpadded (per-sequence chunks).
+    """
+    if lengths is not None and cfg.has_ssm_state:
+        raise ValueError("ragged chunked prefill unsupported for SSM layers")
+    x = embed(cfg, params, tokens)
+    b, l = tokens.shape[:2]
+    positions = offsets[:, None] + jnp.arange(l, dtype=jnp.int32)[None, :]
+    valid = (
+        jnp.arange(l)[None, :] < lengths[:, None]
+        if lengths is not None
+        else None
+    )
+    img_x = (
+        project_image_embeds(cfg, params, image_embeds)
+        if image_embeds is not None
+        else None
+    )
+    x, caches, _ = run_periods(
+        cfg,
+        params["layers"],
+        x,
+        mode="prefill",
+        positions=positions,
+        caches=caches,
+        valid=valid,
+        img_x=img_x,
+        capacity_factor=capacity_factor,
+    )
+    logits = lm_head(cfg, params, x)  # (B, L, V)
+    if lengths is not None:
+        last_idx = jnp.maximum(lengths - 1, 0)
+    else:
+        last_idx = jnp.full((b,), l - 1, jnp.int32)
+    last_logits = jnp.take_along_axis(
+        logits, last_idx[:, None, None], axis=1
+    )[:, 0, :]
+    return last_logits, caches
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: PyTree,
+    last_tokens: jnp.ndarray,  # (B,) int32
+    caches: Dict[str, PyTree],
+    seq_lens: jnp.ndarray,  # (B,) current lengths (new token position)
+    *,
+    capacity_factor: float = -1.0,  # dropless by default (path-exact serving)
+) -> Tuple[jnp.ndarray, Dict[str, PyTree]]:
+    """One decode iteration. Returns (logits (B,V), new caches)."""
+    x = embed(cfg, params, last_tokens[:, None])
+    positions = seq_lens[:, None]
+    x, caches, _ = run_periods(
+        cfg,
+        params["layers"],
+        x,
+        mode="decode",
+        positions=positions,
+        caches=caches,
+        capacity_factor=capacity_factor,
+    )
+    return lm_head(cfg, params, x)[:, 0, :], caches
+
+
+# ---------------------------------------------------------------------------
+# Segmented execution (ConServe preemption safepoints)
+# ---------------------------------------------------------------------------
+
+
+def num_segments(cfg: ModelConfig) -> int:
+    period = cfg.pattern_period
+    periods_per_seg = max(1, cfg.safepoint_interval // period)
+    return math.ceil(cfg.num_periods / periods_per_seg)
+
+
+def segment_bounds(cfg: ModelConfig, seg: int) -> Tuple[int, int]:
+    period = cfg.pattern_period
+    pps = max(1, cfg.safepoint_interval // period)
+    lo = seg * pps
+    hi = min(cfg.num_periods, lo + pps)
+    return lo, hi
+
+
+def slice_periods(tree: PyTree, lo: int, hi: int) -> PyTree:
+    return jax.tree.map(lambda a: a[lo:hi], tree)
+
+
+def merge_periods(tree: PyTree, update: PyTree, lo: int, hi: int) -> PyTree:
+    return jax.tree.map(
+        lambda a, u: a.at[lo:hi].set(u), tree, update
+    )
+
+
+def run_segment(
+    cfg: ModelConfig,
+    params: PyTree,
+    seg: int,
+    x: jnp.ndarray,
+    caches: Optional[Dict[str, PyTree]],
+    *,
+    mode: str,
+    positions: jnp.ndarray,
+    valid: Optional[jnp.ndarray] = None,
+    capacity_factor: float = 1.25,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, PyTree]]]:
+    """Run one preemptible segment (periods [lo, hi))."""
+    lo, hi = segment_bounds(cfg, seg)
+    lp = slice_periods(params["layers"], lo, hi)
+    cs = slice_periods(caches, lo, hi) if caches is not None else None
+    x, cs_new, _ = run_periods(
+        cfg,
+        lp,
+        x,
+        mode=mode,
+        positions=positions,
+        caches=cs,
+        valid=valid,
+        capacity_factor=capacity_factor,
+    )
+    new_caches = (
+        merge_periods(caches, cs_new, lo, hi) if caches is not None else None
+    )
+    return x, new_caches

@@ -1,0 +1,111 @@
+"""Frontends: real-time streaming API (online) + Batch API (offline).
+
+Mirrors the paper's frontend split (§4.1): the streaming API assigns high
+priority and returns tokens as they are produced; the Batch API (OpenAI
+Batch style) accepts a pool of requests and resolves asynchronously.  Users
+never set priorities manually (§5) — the API chooses.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Iterator, List, Optional
+
+import numpy as np
+
+from repro.core.request import Phase, Priority, Request
+
+
+@dataclass
+class StreamHandle:
+    request: Request
+    _cursor: int = 0
+
+    def poll(self) -> List[int]:
+        """Tokens produced since the last poll (streaming semantics)."""
+        new = self.request.output_tokens[self._cursor :]
+        self._cursor += len(new)
+        return new
+
+    @property
+    def finished(self) -> bool:
+        return self.request.phase == Phase.FINISHED
+
+
+@dataclass
+class BatchJob:
+    job_id: int
+    requests: List[Request]
+
+    @property
+    def done(self) -> bool:
+        return all(r.phase == Phase.FINISHED for r in self.requests)
+
+    @property
+    def progress(self) -> float:
+        total = sum(r.max_new_tokens for r in self.requests)
+        got = sum(r.num_generated for r in self.requests)
+        return got / max(1, total)
+
+    def results(self) -> List[List[int]]:
+        if not self.done:
+            raise RuntimeError("batch job still running")
+        return [r.output_tokens for r in self.requests]
+
+
+class Frontend:
+    """Binds the two APIs to an engine (real or simulated).
+
+    ``engine`` must expose ``submit(request)`` and, for the urgent online
+    path, ``on_online_arrival(request)`` (real engine) — the simulated
+    engine's trace-driven run delivers arrivals itself.
+    """
+
+    def __init__(self, engine, clock: Optional[Callable[[], float]] = None):
+        self.engine = engine
+        self._clock = clock or (lambda: 0.0)
+        self._jobs = itertools.count()
+
+    # ---- real-time streaming API (online) --------------------------------
+    def stream(
+        self,
+        prompt: np.ndarray,
+        max_new_tokens: int,
+        image_embeds: Optional[np.ndarray] = None,
+    ) -> StreamHandle:
+        req = Request(
+            Priority.ONLINE,
+            prompt_len=len(prompt),
+            max_new_tokens=max_new_tokens,
+            arrival_time=self._clock(),
+            prompt=np.asarray(prompt, np.int32),
+            image_embeds=image_embeds,
+        )
+        if hasattr(self.engine, "on_online_arrival"):
+            self.engine.on_online_arrival(req)
+        else:
+            self.engine.submit(req)
+        return StreamHandle(req)
+
+    # ---- Batch API (offline) ----------------------------------------------
+    def submit_batch(
+        self,
+        prompts: List[np.ndarray],
+        max_new_tokens: int,
+        image_embeds: Optional[List[np.ndarray]] = None,
+    ) -> BatchJob:
+        reqs = []
+        for i, p in enumerate(prompts):
+            reqs.append(
+                Request(
+                    Priority.OFFLINE,
+                    prompt_len=len(p),
+                    max_new_tokens=max_new_tokens,
+                    arrival_time=self._clock(),
+                    prompt=np.asarray(p, np.int32),
+                    image_embeds=None if image_embeds is None else image_embeds[i],
+                )
+            )
+        for r in reqs:
+            self.engine.submit(r)
+        return BatchJob(next(self._jobs), reqs)

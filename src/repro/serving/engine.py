@@ -1,0 +1,272 @@
+"""Simulated-time co-serving engine.
+
+Runs the REAL ConServe policy code — ``UnifiedScheduler`` (Alg. 1+2),
+``Checkpointer`` (adaptive IC), ``HostIOTracker`` (background I/O), safepoint
+semantics — against a discrete-event clock whose iteration durations come
+from a latency model (the analytical TPU/A100 roofline model or a measured
+profile).  This is how the paper's figures are reproduced deterministically
+on a CPU-only container (DESIGN.md §3); the real-execution engine in
+``real_engine.py`` runs the same policies with actual JAX compute.
+
+Timing semantics per iteration:
+  duration = iter_time(shape) + blocking_swap_time (+ safepoint checks)
+  — blocking swaps happen only in swap-on-preempt mode without IC (the
+    vLLM++ baseline); ConServe's discard-after-checkpoint is free.
+  — checkpoint + prefetch bytes drain in the *background* through the host
+    link tracker; the SLO-aware cap defers what doesn't fit.
+Mid-iteration online arrivals are delivered at safepoint boundaries of
+pure-offline batches (Algorithm 2 may abort the batch there); co-serving
+batches are budget-bounded, so arrivals simply queue until the next
+schedule — exactly the paper's design.
+"""
+from __future__ import annotations
+
+import bisect
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.checkpoint import (
+    AdaptiveCheckpointPolicy,
+    Checkpointer,
+    HostIOTracker,
+)
+from repro.core.profiler import (
+    AnalyticalCostModel,
+    BatchShape,
+    HardwareSpec,
+    LatencyModel,
+    TPU_V5E,
+    block_bytes,
+)
+from repro.core.request import Phase, Priority, Request
+from repro.core.scheduler import (
+    IterationPlan,
+    SchedulerConfig,
+    UnifiedScheduler,
+)
+from repro.core.slo import SLO, ServiceMetrics, summarize
+from repro.models.config import ModelConfig
+from repro.models.transformer import num_segments
+
+
+@dataclass
+class EngineConfig:
+    block_size: int = 16
+    num_device_blocks: int = 4096
+    num_host_blocks: int = 16384
+    # ConServe features (ablation knobs, benchmarks/fig8):
+    enable_checkpointing: bool = True  # incremental checkpointing (§4.4)
+    enable_background_prefetch: bool = True  # overlap swap-in (§4.4)
+    enable_safepoints: bool = True  # layer-wise preemption (§4.3)
+    safepoint_check_s: float = 988e-6  # paper-measured barrier cost (§6.4.2)
+    max_sim_iterations: int = 2_000_000
+
+
+@dataclass
+class IterationRecord:
+    t_start: float
+    t_end: float
+    total_tokens: int
+    online_tokens: int
+    offline_tokens: int
+    aborted: bool
+    blocking_swap_s: float
+
+
+class SimEngine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        slo: SLO = SLO(),
+        sched_cfg: SchedulerConfig = SchedulerConfig(),
+        eng_cfg: EngineConfig = EngineConfig(),
+        hw: HardwareSpec = TPU_V5E,
+        tp: int = 1,
+        latency_model: Optional[LatencyModel] = None,
+    ):
+        from repro.kvcache.block_manager import BlockManager
+
+        self.cfg = cfg
+        self.slo = slo
+        self.ec = eng_cfg
+        self.hw = hw
+        self.lat: LatencyModel = latency_model or AnalyticalCostModel(cfg, hw, tp)
+        self.blocks = BlockManager(
+            eng_cfg.num_device_blocks, eng_cfg.num_host_blocks, eng_cfg.block_size
+        )
+        self.bytes_per_block = max(1, block_bytes(cfg, eng_cfg.block_size))
+        self.sched = UnifiedScheduler(cfg, self.lat, slo, self.blocks, sched_cfg)
+        self.io = HostIOTracker(host_bw=hw.host_bw)
+        self.ckpt = Checkpointer(
+            self.blocks,
+            AdaptiveCheckpointPolicy(),
+            self.bytes_per_block,
+            enabled=eng_cfg.enable_checkpointing,
+        )
+        if eng_cfg.enable_background_prefetch:
+            # admit swap-ins only while the link backlog stays ~1 window
+            self.sched.io_gate = lambda: self.io.backlog_bytes < 2 * self.hw.host_bw * 0.05
+        self._arrivals: List[Request] = []  # sorted by arrival_time
+        self.history: List[IterationRecord] = []
+        self.preemption_latencies: List[float] = []  # Alg.2 responsiveness
+        self.now = 0.0
+
+    # ------------------------------------------------------------------ api
+    def submit(self, reqs: List[Request]) -> None:
+        self._arrivals.extend(reqs)
+        self._arrivals.sort(key=lambda r: r.arrival_time)
+
+    # ------------------------------------------------------------------ run
+    def _deliver_arrivals(self, upto: float) -> List[Tuple[float, Request]]:
+        """Move arrivals with time <= upto into the scheduler queues.
+        Returns the delivered (time, request) list (online ones trigger
+        Algorithm 2 when called at a safepoint)."""
+        delivered = []
+        while self._arrivals and self._arrivals[0].arrival_time <= upto + 1e-12:
+            r = self._arrivals.pop(0)
+            delivered.append((r.arrival_time, r))
+        return delivered
+
+    def _work_pending(self) -> bool:
+        s = self.sched
+        return bool(
+            self._arrivals
+            or s.online_q
+            or s.offline_q
+            or s.running
+            or s.preempted
+        )
+
+    def run(self, t_end: float, drain: bool = False) -> ServiceMetrics:
+        """Simulate until ``t_end`` (or until drained if ``drain``)."""
+        sched = self.sched
+        iters = 0
+        while iters < self.ec.max_sim_iterations:
+            iters += 1
+            if self.now >= t_end and not drain:
+                break
+            if not self._work_pending():
+                break
+            # deliver anything that has arrived by now
+            for _, r in self._deliver_arrivals(self.now):
+                sched.submit(r)
+
+            plan = sched.plan_iteration(self.now)
+            blocking = self._process_events(plan)
+            if plan.empty:
+                # idle: jump to the next arrival
+                if self._arrivals:
+                    self.now = max(self.now, self._arrivals[0].arrival_time)
+                    continue
+                break
+
+            t_iter = self.lat.iter_time(plan.shape) + blocking
+            if (
+                plan.pure_offline
+                and self.ec.enable_safepoints
+                and sched.sc.preempt_running
+            ):
+                self._run_preemptible(plan, t_iter, blocking)
+            else:
+                self.now += t_iter
+                self._finish_iteration(plan, t_iter, blocking, aborted=False)
+        return self.metrics(duration=self.now)
+
+    # ------------------------------------------------------- iteration paths
+    def _run_preemptible(
+        self, plan: IterationPlan, t_iter: float, blocking: float
+    ) -> None:
+        """Pure-offline batch with safepoints: walk segment boundaries,
+        deliver arrivals, let Algorithm 2 abort if TTFT is endangered."""
+        sched = self.sched
+        nseg = max(1, num_segments(self.cfg))
+        seg_dt = t_iter / nseg
+        t0 = self.now
+        trigger_time: Optional[float] = None
+        for i in range(nseg):
+            t_boundary = t0 + (i + 1) * seg_dt + i * self.ec.safepoint_check_s
+            arrivals = self._deliver_arrivals(t_boundary)
+            for at, r in arrivals:
+                if r.is_online:
+                    if sched.on_online_arrival(r, at) and trigger_time is None:
+                        trigger_time = at
+                else:
+                    sched.submit(r)
+            if i < nseg - 1 and sched.preempt_flag:
+                # abort at this safepoint
+                self.now = t_boundary
+                sched.preempt_flag = False
+                if trigger_time is not None:
+                    self.preemption_latencies.append(self.now - trigger_time)
+                self._finish_iteration(
+                    plan, self.now - t0, blocking, aborted=True
+                )
+                return
+        total = t_iter + (nseg - 1) * self.ec.safepoint_check_s
+        self.now = t0 + total
+        sched.preempt_flag = False
+        self._finish_iteration(plan, total, blocking, aborted=False)
+
+    def _finish_iteration(
+        self, plan: IterationPlan, dur: float, blocking: float, aborted: bool
+    ) -> None:
+        sched = self.sched
+        sched.commit(plan, self.now, aborted=aborted)
+        shape = plan.shape
+        online_toks = sum(
+            1 for r in plan.decode_reqs if r.is_online
+        ) + sum(c.length for c in plan.prefill_chunks if c.request.is_online)
+        self.history.append(
+            IterationRecord(
+                t_start=self.now - dur,
+                t_end=self.now,
+                total_tokens=shape.total_tokens,
+                online_tokens=online_toks,
+                offline_tokens=shape.total_tokens - online_toks,
+                aborted=aborted,
+                blocking_swap_s=blocking,
+            )
+        )
+        if aborted:
+            return
+        # ---- incremental checkpointing after the step (§4.4) --------------
+        executed_offline = [
+            r for r in plan.decode_reqs if not r.is_online
+        ] + [c.request for c in plan.prefill_chunks if not c.request.is_online]
+        self.ckpt.mark(executed_offline)
+        budget_blocks = self.io.budget_blocks(
+            self.now, window=max(dur, 1e-4), bytes_per_block=self.bytes_per_block
+        )
+        chosen = self.ckpt.plan(budget_blocks)
+        if chosen:
+            self.io.enqueue(self.now, len(chosen) * self.bytes_per_block)
+
+    def _process_events(self, plan: IterationPlan) -> float:
+        """Consume scheduler events; returns blocking seconds to add."""
+        blocking = 0.0
+        for kind, req, n_blocks in self.sched.events:
+            nbytes = n_blocks * self.bytes_per_block
+            if kind == "preempt_swap":
+                # no IC: swap-out stalls the pipeline (vLLM++ behaviour)
+                blocking += self.lat.swap_time(nbytes) if nbytes else 0.0
+                self.ckpt.stats.blocking_swap_outs += 1
+            elif kind == "preempt_discard":
+                if self.blocks.has_seq(req.request_id) and req.host_recoverable:
+                    self.ckpt.stats.free_discards += 1
+                self.ckpt.unmark(req)
+            elif kind == "resume":
+                if nbytes:
+                    if self.ec.enable_background_prefetch:
+                        self.io.enqueue(self.now, nbytes)  # overlapped
+                        self.ckpt.stats.blocks_prefetched += n_blocks
+                        self.ckpt.stats.bytes_prefetched += nbytes
+                    else:
+                        blocking += self.lat.swap_time(nbytes)
+        self.sched.events.clear()
+        return blocking
+
+    # -------------------------------------------------------------- metrics
+    def metrics(self, duration: Optional[float] = None) -> ServiceMetrics:
+        return summarize(
+            self.sched.all_requests(), self.slo, duration or self.now
+        )

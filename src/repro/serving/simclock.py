@@ -1,0 +1,22 @@
+"""Discrete-event virtual clock for simulated-time serving runs."""
+from __future__ import annotations
+
+
+class SimClock:
+    def __init__(self, start: float = 0.0):
+        self._t = start
+
+    def now(self) -> float:
+        return self._t
+
+    def advance(self, dt: float) -> float:
+        if dt < 0:
+            raise ValueError(f"time cannot go backwards (dt={dt})")
+        self._t += dt
+        return self._t
+
+    def advance_to(self, t: float) -> float:
+        if t < self._t - 1e-12:
+            raise ValueError(f"time cannot go backwards ({t} < {self._t})")
+        self._t = max(self._t, t)
+        return self._t

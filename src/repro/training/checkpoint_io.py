@@ -1,0 +1,50 @@
+"""Weight checkpoint save/load: flat .npz with slash-joined pytree paths."""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(path: str, params: PyTree, step: int = 0) -> None:
+    flat = _flatten(params)
+    flat["__step__"] = np.asarray(step)
+    tmp = path + ".tmp"
+    np.savez(tmp, **flat)
+    os.replace(tmp + ".npz" if not tmp.endswith(".npz") else tmp, path)
+
+
+def load(path: str, like: PyTree) -> Tuple[PyTree, int]:
+    """Restore into the structure of ``like`` (shapes must match)."""
+    data = np.load(path)
+    step = int(data["__step__"]) if "__step__" in data else 0
+    flat_like = _flatten(like)
+    missing = set(flat_like) - set(data.files)
+    if missing:
+        raise ValueError(f"checkpoint missing keys: {sorted(missing)[:5]}...")
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(like)
+    paths, treedef = leaves_with_path[0], leaves_with_path[1]
+    new_leaves = []
+    for path, leaf in paths:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        arr = data[key]
+        if arr.shape != leaf.shape:
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        new_leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), step

@@ -1,0 +1,76 @@
+"""AdamW + cosine schedule with warmup — pure JAX, no external deps."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    betas: Tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    grad_clip: float = 1.0
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: PyTree
+    nu: PyTree
+
+
+def init(params: PyTree) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros, nu=zeros)
+
+
+def schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup_steps))
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / max(1, cfg.total_steps - cfg.warmup_steps),
+        0.0,
+        1.0,
+    )
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * cos
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def apply(
+    cfg: AdamWConfig, params: PyTree, grads: PyTree, state: AdamWState
+) -> Tuple[PyTree, AdamWState, jnp.ndarray]:
+    """Returns (new_params, new_state, grad_norm)."""
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gn + 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    b1, b2 = cfg.betas
+    step = state.step + 1
+    lr = schedule(cfg, state.step)
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, grads)
+    mu_hat = jax.tree.map(lambda m: m / (1 - b1 ** step.astype(jnp.float32)), mu)
+    nu_hat = jax.tree.map(lambda v: v / (1 - b2 ** step.astype(jnp.float32)), nu)
+
+    def upd(p, m, v):
+        delta = m / (jnp.sqrt(v) + cfg.eps) + cfg.weight_decay * p.astype(
+            jnp.float32
+        )
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu_hat, nu_hat)
+    return new_params, AdamWState(step=step, mu=mu, nu=nu), gn

@@ -1,0 +1,10 @@
+import os
+import sys
+
+# Tests must see the single real CPU device (the 512-device override is for
+# launch/dryrun.py ONLY — see the system design notes).
+assert "xla_force_host_platform_device_count" not in os.environ.get(
+    "XLA_FLAGS", ""
+), "do not set the dry-run device override globally"
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

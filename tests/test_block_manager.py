@@ -1,0 +1,150 @@
+"""Block manager: unit tests + hypothesis property tests on the invariants."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kvcache.block_manager import BlockManager, OutOfBlocks
+
+
+def test_alloc_free_roundtrip():
+    bm = BlockManager(16, 16, 4)
+    bm.register_seq(1)
+    new = bm.grow(1, 10)
+    assert len(new) == 3  # ceil(10/4)
+    assert bm.used_device_blocks == 3
+    bm.free_seq(1)
+    assert bm.used_device_blocks == 0
+    bm.check_invariants()
+
+
+def test_grow_is_monotonic_noop_when_covered():
+    bm = BlockManager(16, 16, 4)
+    bm.register_seq(1)
+    bm.grow(1, 10)
+    assert bm.grow(1, 8) == []  # recompute after resume never shrinks
+    assert bm.grow(1, 11) == []  # capacity already covers
+    assert len(bm.grow(1, 13)) == 1
+    bm.check_invariants()
+
+
+def test_out_of_blocks():
+    bm = BlockManager(2, 4, 4)
+    bm.register_seq(1)
+    with pytest.raises(OutOfBlocks):
+        bm.grow(1, 100)
+
+
+def test_checkpoint_only_complete_blocks():
+    bm = BlockManager(16, 16, 4)
+    bm.register_seq(1)
+    bm.grow(1, 10)  # 2 complete blocks + partial tail
+    cands = bm.checkpoint_candidates(1)
+    assert [i for i, _ in cands] == [0, 1]
+    for i, _ in cands:
+        bm.assign_checkpoint(1, i)
+    assert bm.is_fully_checkpointed(1)
+    assert bm.checkpoint_candidates(1) == []
+    bm.check_invariants()
+
+
+def test_preempt_discard_free_when_checkpointed():
+    bm = BlockManager(16, 16, 4)
+    bm.register_seq(1)
+    bm.grow(1, 8)
+    for i, _ in bm.checkpoint_candidates(1):
+        bm.assign_checkpoint(1, i)
+    recompute, _ = bm.preempt_discard(1)
+    assert recompute == 0  # fully checkpointed: free discard
+    copies = bm.resume(1)
+    assert len(copies) == 2  # swap-in restores both blocks
+    bm.check_invariants()
+
+
+def test_preempt_discard_partial_checkpoint():
+    bm = BlockManager(16, 16, 4)
+    bm.register_seq(1)
+    bm.grow(1, 12)
+    bm.assign_checkpoint(1, 0)  # only first block
+    recompute, _ = bm.preempt_discard(1)
+    assert recompute == 8  # blocks 1-2 lost
+    assert bm.tokens_recoverable_from_host(1) == 4
+    bm.check_invariants()
+
+
+def test_non_contiguous_checkpoint_prefix_released():
+    bm = BlockManager(16, 16, 4)
+    bm.register_seq(1)
+    bm.grow(1, 12)
+    bm.assign_checkpoint(1, 1)  # hole at block 0
+    recompute, _ = bm.preempt_discard(1)
+    assert recompute == 12  # nothing contiguous from the start
+    assert bm.tokens_recoverable_from_host(1) == 0
+    assert bm.free_host_blocks == 16  # orphan host block released
+    bm.check_invariants()
+
+
+def test_swap_out_atomic_on_host_exhaustion():
+    bm = BlockManager(16, 1, 4)
+    bm.register_seq(1)
+    bm.grow(1, 12)
+    with pytest.raises(OutOfBlocks):
+        bm.preempt_swap_out(1)
+    bm.check_invariants()  # no partial mutation
+    assert bm.seq(1).on_device
+
+
+def test_swap_out_and_resume():
+    bm = BlockManager(16, 16, 4)
+    bm.register_seq(1)
+    bm.grow(1, 9)
+    copies = bm.preempt_swap_out(1)
+    assert len(copies) == 3
+    assert bm.used_device_blocks == 0
+    swapins = bm.resume(1)
+    assert len(swapins) == 3
+    bm.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# property test: arbitrary op sequences preserve all invariants
+# ---------------------------------------------------------------------------
+
+ops = st.lists(
+    st.tuples(
+        st.sampled_from(["register", "grow", "ckpt", "discard", "swap",
+                         "resume", "free"]),
+        st.integers(0, 5),  # seq id
+        st.integers(1, 40),  # token amount
+    ),
+    max_size=60,
+)
+
+
+@settings(max_examples=200, deadline=None)
+@given(ops)
+def test_invariants_under_arbitrary_ops(op_seq):
+    bm = BlockManager(12, 10, 4)
+    for op, sid, amount in op_seq:
+        try:
+            if op == "register":
+                bm.register_seq(sid)
+            elif op == "grow":
+                sb = bm.seq(sid)
+                bm.grow(sid, sb.num_tokens + amount)
+            elif op == "ckpt":
+                cands = bm.checkpoint_candidates(sid)
+                if cands:
+                    bm.assign_checkpoint(sid, cands[0][0])
+            elif op == "discard":
+                if bm.seq(sid).on_device:
+                    bm.preempt_discard(sid)
+            elif op == "swap":
+                if bm.seq(sid).on_device:
+                    bm.preempt_swap_out(sid)
+            elif op == "resume":
+                if not bm.seq(sid).on_device and bm.can_resume(sid):
+                    bm.resume(sid)
+            elif op == "free":
+                bm.free_seq(sid)
+        except (KeyError, ValueError, OutOfBlocks):
+            pass  # invalid transitions are rejected, never corrupting
+        bm.check_invariants()

@@ -1,0 +1,78 @@
+"""Incremental checkpointing: adaptive policy ramp, checkpointer interfaces,
+host-IO backlog model."""
+from repro.core.checkpoint import (
+    AdaptiveCheckpointPolicy,
+    Checkpointer,
+    HostIOTracker,
+)
+from repro.core.request import Priority, Request
+from repro.kvcache.block_manager import BlockManager
+
+
+def test_policy_below_threshold_is_idle():
+    pol = AdaptiveCheckpointPolicy(start_threshold=0.5)
+    pol.observe(10)
+    assert pol.blocks_this_iter(0.3, candidates=100) == 0
+
+
+def test_policy_ramps_with_pressure():
+    pol = AdaptiveCheckpointPolicy(start_threshold=0.5, max_blocks_per_iter=64)
+    for used in range(0, 100, 10):
+        pol.observe(used)  # consumption ~10 blocks/iter
+    low = pol.blocks_this_iter(0.55, candidates=1000)
+    high = pol.blocks_this_iter(0.95, candidates=1000)
+    assert 0 < low <= high
+    assert high <= 64 or high <= 1000
+
+
+def test_policy_tracks_consumption_rate():
+    slow, fast = AdaptiveCheckpointPolicy(), AdaptiveCheckpointPolicy()
+    for i in range(10):
+        slow.observe(i)  # 1 block/iter
+        fast.observe(i * 20)  # 20 blocks/iter
+    assert fast.blocks_this_iter(0.6, 1000) >= slow.blocks_this_iter(0.6, 1000)
+
+
+def test_checkpointer_mark_plan_interfaces():
+    bm = BlockManager(64, 64, 4)
+    ck = Checkpointer(bm, AdaptiveCheckpointPolicy(start_threshold=0.0),
+                      bytes_per_block=1024)
+    r = Request(Priority.OFFLINE, 20, 8)
+    bm.register_seq(r.request_id)
+    bm.grow(r.request_id, 20)  # 5 blocks
+    ck.mark([r])
+    chosen = ck.plan(io_budget_blocks=100)
+    assert chosen, "complete blocks should be selected under pressure 0-threshold"
+    assert all(seq == r.request_id for seq, _, _, _ in chosen)
+    # selected blocks now have host copies
+    assert bm.seq(r.request_id).num_checkpointed == len(chosen)
+
+
+def test_checkpointer_skips_online():
+    bm = BlockManager(64, 64, 4)
+    ck = Checkpointer(bm, AdaptiveCheckpointPolicy(start_threshold=0.0), 1024)
+    r = Request(Priority.ONLINE, 20, 8)
+    bm.register_seq(r.request_id)
+    bm.grow(r.request_id, 20)
+    ck.mark([r])
+    assert ck.plan(100) == []
+
+
+def test_checkpointer_respects_io_budget():
+    bm = BlockManager(64, 64, 4)
+    ck = Checkpointer(bm, AdaptiveCheckpointPolicy(start_threshold=0.0,
+                                                   max_blocks_per_iter=64), 1024)
+    r = Request(Priority.OFFLINE, 64, 8)
+    bm.register_seq(r.request_id)
+    bm.grow(r.request_id, 64)
+    ck.mark([r])
+    assert len(ck.plan(io_budget_blocks=3)) <= 3
+
+
+def test_host_io_tracker_drains():
+    io = HostIOTracker(host_bw=100.0)
+    done_at = io.enqueue(0.0, 500.0)
+    assert abs(done_at - 5.0) < 1e-9
+    io.enqueue(1.0, 100.0)  # backlog 400 + 100
+    assert abs(io.backlog_bytes - 500.0) < 1e-9
+    assert io.budget_blocks(6.0, window=2.0, bytes_per_block=10) == 20

@@ -1,0 +1,178 @@
+"""Model-layer numerics: serving-path equivalences, MoE vs dense oracle,
+chunked SSD vs sequential recurrence, blockwise vs dense attention,
+sliding-window ring cache, hypothesis shape sweeps for paged attention."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.models import mamba2, moe as moe_mod, transformer as tf
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    blockwise_attention,
+    causal_mask,
+    gqa_scores_softmax_values,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _roundtrip(cfg: ModelConfig, T=24, P=16, B=2, tol=2e-4):
+    """prefill_chunk + decode_step must match forward_full exactly."""
+    params = tf.init_params(cfg, KEY)
+    toks = jax.random.randint(KEY, (B, T), 0, cfg.vocab_size)
+    img = (
+        jax.random.normal(KEY, (B, cfg.num_image_tokens, cfg.vision_dim))
+        if cfg.vision_dim
+        else None
+    )
+    full, _, _ = tf.forward_full(cfg, params, toks, image_embeds=img,
+                                 capacity_factor=-1.0)
+    caches = tf.init_caches(cfg, B, T + 4)
+    last, caches = tf.prefill_chunk(
+        cfg, params, toks[:, :P], caches, jnp.zeros((B,), jnp.int32),
+        image_embeds=img,
+    )
+    errs = [float(jnp.max(jnp.abs(last - full[:, P - 1])))]
+    for t in range(P, T):
+        lg, caches = tf.decode_step(
+            cfg, params, toks[:, t], caches, jnp.full((B,), t, jnp.int32)
+        )
+        errs.append(float(jnp.max(jnp.abs(lg - full[:, t]))))
+    assert max(errs) < tol, f"{cfg.name}: {max(errs)}"
+
+
+@pytest.mark.parametrize(
+    "arch",
+    ["llama-2-7b", "qwen2-0.5b", "mixtral-8x22b", "olmoe-1b-7b",
+     "mamba2-1.3b", "jamba-1.5-large-398b", "llama-3.2-vision-11b",
+     "gemma-7b", "yi-34b", "command-r-plus-104b"],
+)
+def test_prefill_decode_equals_full(arch):
+    _roundtrip(get_config(arch).reduced())
+
+
+def test_chunked_prefill_equals_monolithic():
+    cfg = get_config("llama-2-7b").reduced()
+    params = tf.init_params(cfg, KEY)
+    B, T = 2, 32
+    toks = jax.random.randint(KEY, (B, T), 0, cfg.vocab_size)
+    full, _, _ = tf.forward_full(cfg, params, toks)
+    caches = tf.init_caches(cfg, B, T)
+    off = jnp.zeros((B,), jnp.int32)
+    for lo in range(0, T, 8):  # 4 chunks of 8
+        last, caches = tf.prefill_chunk(
+            cfg, params, toks[:, lo : lo + 8], caches, off + lo
+        )
+    err = float(jnp.max(jnp.abs(last - full[:, -1])))
+    assert err < 2e-4
+
+
+def test_sliding_window_ring_cache_decode():
+    """Decoding past the window with the ring cache must equal dense
+    attention with the sliding-window mask."""
+    cfg = get_config("mixtral-8x22b").reduced(sliding_window=16, num_layers=2)
+    params = tf.init_params(cfg, KEY)
+    B, T = 1, 40  # far beyond window 16
+    toks = jax.random.randint(KEY, (B, T), 0, cfg.vocab_size)
+    full, _, _ = tf.forward_full(cfg, params, toks, capacity_factor=-1.0)
+    caches = tf.init_caches(cfg, B, T)  # capacity clamps to window
+    last, caches = tf.prefill_chunk(
+        cfg, params, toks[:, :8], caches, jnp.zeros((B,), jnp.int32)
+    )
+    errs = []
+    for t in range(8, T):
+        lg, caches = tf.decode_step(
+            cfg, params, toks[:, t], caches, jnp.full((B,), t, jnp.int32)
+        )
+        errs.append(float(jnp.max(jnp.abs(lg - full[:, t]))))
+    assert max(errs) < 2e-4, max(errs)
+
+
+def test_moe_dispatch_matches_dense_oracle():
+    cfg = get_config("olmoe-1b-7b").reduced()
+    p = moe_mod.init_moe(cfg, KEY, jnp.float32)
+    x = jax.random.normal(KEY, (2, 12, cfg.d_model))
+    out, _ = moe_mod.moe_ffn(cfg, p, x, capacity_factor=-1.0)  # dropless
+    ref = moe_mod.moe_ffn_dense_oracle(cfg, p, x)
+    assert float(jnp.max(jnp.abs(out - ref))) < 1e-5
+
+
+def test_moe_capacity_drops_degrade_gracefully():
+    cfg = get_config("olmoe-1b-7b").reduced()
+    p = moe_mod.init_moe(cfg, KEY, jnp.float32)
+    x = jax.random.normal(KEY, (2, 12, cfg.d_model))
+    out, aux = moe_mod.moe_ffn(cfg, p, x, capacity_factor=1.0)
+    assert jnp.all(jnp.isfinite(out))
+    assert float(aux) >= 0.0
+
+
+def test_mamba_chunked_equals_sequential():
+    cfg = get_config("mamba2-1.3b").reduced(num_layers=1)
+    p = mamba2.init_mamba(cfg, KEY, jnp.float32)
+    x = jax.random.normal(KEY, (2, 70, cfg.d_model)) * 0.3  # != chunk multiple
+    y_fast, st_fast = mamba2.mamba_full(cfg, p, x)
+    y_ref, st_ref = mamba2.mamba_full_ref(cfg, p, x)
+    assert float(jnp.max(jnp.abs(y_fast - y_ref))) < 5e-4
+    assert float(jnp.max(jnp.abs(st_fast.ssm - st_ref.ssm))) < 5e-4
+
+
+def test_mamba_state_carry_across_chunks():
+    cfg = get_config("mamba2-1.3b").reduced(num_layers=1)
+    p = mamba2.init_mamba(cfg, KEY, jnp.float32)
+    x = jax.random.normal(KEY, (1, 64, cfg.d_model)) * 0.3
+    y_once, st_once = mamba2.mamba_full(cfg, p, x)
+    y1, st1 = mamba2.mamba_full(cfg, p, x[:, :40])
+    y2, st2 = mamba2.mamba_full(cfg, p, x[:, 40:], st1)
+    y_cat = jnp.concatenate([y1, y2], axis=1)
+    assert float(jnp.max(jnp.abs(y_cat - y_once))) < 5e-4
+    assert float(jnp.max(jnp.abs(st2.ssm - st_once.ssm))) < 5e-4
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    tq=st.integers(2, 130),
+    h=st.sampled_from([2, 4, 8]),
+    g=st.sampled_from([1, 2]),
+    sw=st.sampled_from([0, 7, 33]),
+    causal=st.booleans(),
+)
+def test_blockwise_attention_property(tq, h, g, sw, causal):
+    causal = causal or bool(sw)  # sliding window implies causal (config-land)
+    hkv = h // g if h % g == 0 else h
+    d = 16
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = jax.random.normal(k1, (1, tq, hkv * g, d))
+    k = jax.random.normal(k2, (1, tq, hkv, d))
+    v = jax.random.normal(k3, (1, tq, hkv, d))
+    pos = jnp.arange(tq)[None, :]
+    out = blockwise_attention(
+        q, k, v, pos, pos, causal=causal, sliding_window=sw,
+        block_q=32, block_k=16,
+    )
+    mask = causal_mask(pos, pos, sw) if (causal or sw) else None
+    ref = gqa_scores_softmax_values(q, k, v, mask)
+    assert float(jnp.max(jnp.abs(out - ref))) < 5e-5
+
+
+def test_encoder_is_bidirectional():
+    cfg = get_config("hubert-xlarge").reduced()
+    params = tf.init_params(cfg, KEY)
+    B, T = 2, 12
+    x = jax.random.normal(KEY, (B, T, cfg.d_model))
+    logits, _, _ = tf.forward_full(cfg, params, x)
+    # flipping a LATER frame must change EARLIER outputs (bidirectional)
+    x2 = x.at[:, -1].multiply(-1.0)
+    logits2, _, _ = tf.forward_full(cfg, params, x2)
+    assert float(jnp.max(jnp.abs(logits[:, 0] - logits2[:, 0]))) > 1e-6
+
+
+def test_param_count_analytic_matches_actual():
+    for arch in ["llama-2-7b", "mixtral-8x22b", "mamba2-1.3b", "gemma-7b"]:
+        cfg = get_config(arch).reduced()
+        params = tf.init_params(cfg, KEY)
+        actual = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+        est = cfg.param_count()
+        assert abs(actual - est) / actual < 0.02, (arch, actual, est)

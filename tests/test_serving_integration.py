@@ -1,0 +1,252 @@
+"""End-to-end serving integration on real JAX compute (tiny models):
+ * preempt/resume token-identity (the ConServe correctness property)
+ * safepoint abort token-identity
+ * chunked prefill equivalence at the engine level
+ * streaming + batch API frontends
+ * simulated-time co-serving run keeps SLOs vs online-only/vLLM++ baselines
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.request import Phase, Priority, Request
+from repro.core.scheduler import SchedulerConfig
+from repro.core.slo import SLO
+from repro.models import transformer as tf
+from repro.serving import loadgen
+from repro.serving.api import Frontend
+from repro.serving.engine import EngineConfig, SimEngine
+from repro.serving.real_engine import RealEngine, RealEngineConfig
+
+CFG = get_config("llama-2-7b").reduced()
+PARAMS = tf.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def mkreq(prio, plen, gen, seed):
+    prompt = (
+        np.random.default_rng(seed)
+        .integers(0, CFG.vocab_size, plen)
+        .astype(np.int32)
+    )
+    return Request(prio, prompt_len=plen, max_new_tokens=gen, prompt=prompt)
+
+
+def reference_outputs():
+    eng = RealEngine(CFG, PARAMS)
+    reqs = [mkreq(Priority.OFFLINE, 40, 24, s) for s in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    return [r.output_tokens for r in reqs]
+
+
+REF = reference_outputs()
+
+
+def test_uninterrupted_baseline_completes():
+    assert all(len(o) == 24 for o in REF)
+
+
+def test_token_identity_under_memory_preemption():
+    eng = RealEngine(
+        CFG, PARAMS,
+        eng_cfg=RealEngineConfig(num_device_blocks=14, max_model_len=256),
+    )
+    reqs = [mkreq(Priority.OFFLINE, 40, 24, s) for s in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(8):
+        eng.step()
+    online = [mkreq(Priority.ONLINE, 60, 8, 100 + s) for s in range(2)]
+    for r in online:
+        eng.on_online_arrival(r)
+    eng.run()
+    assert sum(r.num_preemptions for r in reqs) > 0, "scenario must preempt"
+    assert [r.output_tokens for r in reqs] == REF
+    assert all(len(r.output_tokens) == 8 for r in online)
+    assert eng.ckpt.stats.blocks_checkpointed > 0
+
+
+def test_token_identity_without_checkpointing():
+    """Pure recompute resume (paper Fig. 4a) must also be exact."""
+    eng = RealEngine(
+        CFG, PARAMS,
+        eng_cfg=RealEngineConfig(
+            num_device_blocks=14, max_model_len=256, enable_checkpointing=False
+        ),
+    )
+    reqs = [mkreq(Priority.OFFLINE, 40, 24, s) for s in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(8):
+        eng.step()
+    for s in range(2):
+        eng.on_online_arrival(mkreq(Priority.ONLINE, 60, 8, 100 + s))
+    eng.run()
+    assert sum(r.num_preemptions for r in reqs) > 0
+    assert [r.output_tokens for r in reqs] == REF
+
+
+def test_token_identity_after_safepoint_abort():
+    eng = RealEngine(CFG, PARAMS)
+    reqs = [mkreq(Priority.OFFLINE, 40, 24, s) for s in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(4):
+        eng.step()
+    eng.flag.set()  # urgent arrival trips Algorithm 2 mid-batch
+    eng.run()
+    assert eng.safepoints.stats.preemptions >= 1
+    assert [r.output_tokens for r in reqs] == REF
+
+
+def test_chunk_size_does_not_change_tokens():
+    outs = []
+    for chunk in (8, 16, 64):
+        eng = RealEngine(
+            CFG, PARAMS, sched_cfg=SchedulerConfig(
+                chunk_size=chunk, slo_aware=False, offline_batch_tokens=4096
+            ),
+        )
+        reqs = [mkreq(Priority.OFFLINE, 40, 12, s) for s in range(2)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run()
+        outs.append([r.output_tokens for r in reqs])
+    assert outs[0] == outs[1] == outs[2]
+
+
+def test_frontend_stream_and_batch():
+    eng = RealEngine(CFG, PARAMS)
+    fe = Frontend(eng)
+    rng = np.random.default_rng(1)
+    h = fe.stream(rng.integers(0, CFG.vocab_size, 20).astype(np.int32), 6)
+    job = fe.submit_batch(
+        [rng.integers(0, CFG.vocab_size, 16).astype(np.int32) for _ in range(3)],
+        max_new_tokens=4,
+    )
+    eng.run()
+    assert h.finished and len(h.poll()) == 6
+    assert job.done and len(job.results()) == 3
+    assert all(len(o) == 4 for o in job.results())
+
+
+def test_vlm_serving_roundtrip():
+    cfg = get_config("llama-3.2-vision-11b").reduced()
+    params = tf.init_params(cfg, jax.random.PRNGKey(1))
+    eng = RealEngine(cfg, params)
+    rng = np.random.default_rng(2)
+    req = Request(
+        Priority.ONLINE, prompt_len=12, max_new_tokens=4,
+        prompt=rng.integers(0, cfg.vocab_size, 12).astype(np.int32),
+        image_embeds=rng.standard_normal(
+            (cfg.num_image_tokens, cfg.vision_dim)
+        ).astype(np.float32),
+    )
+    eng.submit(req)
+    eng.run()
+    assert len(req.output_tokens) == 4
+
+
+def test_ssm_serving_with_recompute_resume():
+    cfg = get_config("mamba2-1.3b").reduced()
+    params = tf.init_params(cfg, jax.random.PRNGKey(2))
+    ref_eng = RealEngine(cfg, params)
+    ref = [mkreq_ssm(cfg, 30, 10, s) for s in range(2)]
+    for r in ref:
+        ref_eng.submit(r)
+    ref_eng.run()
+    eng = RealEngine(
+        cfg, params,
+        eng_cfg=RealEngineConfig(num_device_blocks=6, max_model_len=128),
+    )
+    reqs = [mkreq_ssm(cfg, 30, 10, s) for s in range(2)]
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(4):
+        eng.step()
+    eng.on_online_arrival(mkreq_ssm(cfg, 40, 4, 99, prio=Priority.ONLINE))
+    eng.run()
+    assert [r.output_tokens for r in reqs] == [r.output_tokens for r in ref]
+
+
+def mkreq_ssm(cfg, plen, gen, seed, prio=Priority.OFFLINE):
+    prompt = (
+        np.random.default_rng(seed).integers(0, cfg.vocab_size, plen)
+        .astype(np.int32)
+    )
+    return Request(prio, prompt_len=plen, max_new_tokens=gen, prompt=prompt)
+
+
+# ---------------------------------------------------------------------------
+# simulated-time co-serving behaviour
+# ---------------------------------------------------------------------------
+
+
+def _sim(sched=None, eng=None, online=True, offline=True, dur=60.0, seed=0):
+    from repro.core.profiler import A100_40G
+
+    cfg = get_config("llama-2-7b")
+    slo = SLO(1.5, 0.110)
+    e = SimEngine(cfg, slo, sched or SchedulerConfig(),
+                  eng or EngineConfig(), hw=A100_40G)
+    rng = np.random.default_rng(seed)
+    if online:
+        times = loadgen.gamma_arrivals(2.0, 1.0, dur, rng)
+        e.submit(loadgen.make_online_requests(
+            times, loadgen.LengthSpec(1024, 128), rng))
+    if offline:
+        e.submit(loadgen.make_offline_batch(
+            200, loadgen.LengthSpec(2048, 256), np.random.default_rng(1)))
+    m = e.run(dur)
+    return e, m
+
+
+def test_conserve_meets_slo_and_beats_online_only_throughput():
+    _, m_cs = _sim()
+    _, m_oo = _sim(offline=False)
+    assert m_cs.p99_ttft <= 1.5, m_cs.p99_ttft
+    assert m_cs.p99_tpot <= 0.110, m_cs.p99_tpot
+    assert m_cs.throughput_tokens_per_s > 1.5 * m_oo.throughput_tokens_per_s
+
+
+def test_conserve_beats_vllmpp_latency():
+    _, m_cs = _sim()
+    _, m_pp = _sim(
+        sched=SchedulerConfig(slo_aware=False, preempt_running=False,
+                              swap_on_preempt=True),
+        eng=EngineConfig(enable_checkpointing=False,
+                         enable_background_prefetch=False,
+                         enable_safepoints=False),
+    )
+    assert m_cs.p99_ttft < m_pp.p99_ttft
+    assert m_cs.p99_tpot < m_pp.p99_tpot
+
+
+def test_incremental_checkpointing_reduces_blocking_swaps():
+    eng_ic, _ = _sim(sched=SchedulerConfig(swap_on_preempt=True))
+    eng_no, _ = _sim(
+        sched=SchedulerConfig(swap_on_preempt=True),
+        eng=EngineConfig(enable_checkpointing=False),
+    )
+    # with IC, many preemptions become free discards
+    assert eng_ic.ckpt.stats.free_discards > 0
+    assert eng_ic.ckpt.stats.blocking_swap_outs <= eng_no.ckpt.stats.blocking_swap_outs
+
+
+def test_offline_mode_uses_safepoints_and_aborts():
+    from repro.core.profiler import A100_40G
+
+    e = SimEngine(get_config("llama-2-7b"), SLO(1.5, 0.110),
+                  SchedulerConfig(offline_batch_tokens=65536),
+                  EngineConfig(), hw=A100_40G)
+    e.submit(loadgen.make_offline_batch(
+        200, loadgen.LengthSpec(2048, 256), np.random.default_rng(1)))
+    # online arrival lands inside the multi-second offline prefill wave
+    rng = np.random.default_rng(7)
+    e.submit(loadgen.make_online_requests([0.8], loadgen.LengthSpec(1024, 64), rng))
+    e.run(30.0)
+    aborted = [h for h in e.history if h.aborted]
+    assert aborted, "online arrival into offline batching mode must abort"
+    assert e.preemption_latencies and min(e.preemption_latencies) < 1.0

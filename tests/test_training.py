@@ -1,0 +1,158 @@
+"""Training substrate: optimizer semantics, loss decreases, grad-accum
+equivalence, checkpoint IO roundtrip, profiler fit, load generator stats."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.profiler import (
+    AnalyticalCostModel,
+    BatchShape,
+    MeasuredProfiler,
+    TPU_V5E,
+    run_offline_profiling,
+)
+from repro.models import transformer as tf
+from repro.serving import loadgen
+from repro.training import checkpoint_io, optimizer as opt
+from repro.training.data import DataConfig, SyntheticTokens
+from repro.training.train_loop import make_train_step, train
+
+CFG = get_config("llama-2-7b").reduced()
+
+
+def test_adamw_decreases_quadratic():
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = opt.init(params)
+    cfg = opt.AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=1, total_steps=200)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = opt.apply(cfg, params, grads, state)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.5
+
+
+def test_schedule_warmup_and_decay():
+    cfg = opt.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_frac=0.1)
+    lrs = [float(opt.schedule(cfg, jnp.array(s))) for s in [0, 9, 10, 50, 99]]
+    assert lrs[0] < lrs[1] <= lrs[2]
+    assert lrs[2] >= lrs[3] >= lrs[4]
+    assert lrs[4] >= 0.099
+
+
+def test_grad_clip():
+    params = {"w": jnp.zeros(3)}
+    state = opt.init(params)
+    cfg = opt.AdamWConfig(grad_clip=1.0, weight_decay=0.0)
+    _, _, gn = opt.apply(cfg, params, {"w": jnp.full(3, 100.0)}, state)
+    assert float(gn) > 1.0  # reported pre-clip norm
+
+
+def test_loss_decreases():
+    data = SyntheticTokens(CFG, DataConfig(batch_size=4, seq_len=32))
+    res = train(CFG, iter(data), num_steps=25, log_every=0)
+    assert res.losses[-1] < res.losses[0]
+
+
+def test_grad_accum_matches_single_batch():
+    params = tf.init_params(CFG, jax.random.PRNGKey(0))
+    state = opt.init(params)
+    data = SyntheticTokens(CFG, DataConfig(batch_size=8, seq_len=16))
+    batch = {k: jnp.asarray(v) for k, v in data.next_batch().items()}
+    ocfg = opt.AdamWConfig()
+    s1 = jax.jit(make_train_step(CFG, ocfg, grad_accum=1))
+    s4 = jax.jit(make_train_step(CFG, ocfg, grad_accum=4))
+    p1, _, m1 = s1(params, state, batch)
+    p4, _, m4 = s4(params, state, batch)
+    assert abs(float(m1["loss"]) - float(m4["loss"])) < 2e-3
+    diffs = [
+        float(jnp.max(jnp.abs(a - b)))
+        for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4))
+    ]
+    assert max(diffs) < 5e-2  # same step direction (adam normalizes scale)
+
+
+def test_checkpoint_roundtrip():
+    params = tf.init_params(CFG, jax.random.PRNGKey(0))
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "ckpt.npz")
+        checkpoint_io.save(p, params, step=7)
+        restored, step = checkpoint_io.load(p, params)
+        assert step == 7
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+            assert np.allclose(a, b)
+
+
+def test_checkpoint_shape_mismatch_rejected():
+    params = {"w": jnp.zeros((2, 2))}
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "c.npz")
+        checkpoint_io.save(p, params)
+        with pytest.raises(ValueError):
+            checkpoint_io.load(p, {"w": jnp.zeros((3, 3))})
+
+
+# ------------------------------------------------------------------ profiler
+
+
+def test_analytical_model_monotone():
+    m = AnalyticalCostModel(get_config("llama-2-7b"), TPU_V5E)
+    small = BatchShape(decode_tokens=4, decode_ctx=4 * 512, num_seqs=4)
+    big = BatchShape(decode_tokens=64, decode_ctx=64 * 512, num_seqs=64)
+    assert m.iter_time(small) < m.iter_time(big)
+    assert m.iter_time(BatchShape()) == 0.0
+    assert m.swap_time(1 << 30) > m.swap_time(1 << 20)
+
+
+def test_measured_profiler_fit_and_io():
+    truth = lambda s: (
+        1e-3 + 1e-6 * s.prefill_tokens + 2e-5 * s.decode_tokens
+        + 1e-9 * s.decode_ctx + 1e-10 * s.prefill_attn_tokens
+    )
+    prof = run_offline_profiling(truth)
+    test_shape = BatchShape(prefill_tokens=100, prefill_attn_tokens=5000.0,
+                            prefill_ctx_end=100, decode_tokens=8,
+                            decode_ctx=2048, num_seqs=9)
+    assert abs(prof.iter_time(test_shape) - truth(test_shape)) < 2e-4
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "prof.json")
+        prof.save(p)
+        prof2 = MeasuredProfiler.load(p)
+        assert abs(prof2.iter_time(test_shape) - prof.iter_time(test_shape)) < 1e-9
+
+
+# ------------------------------------------------------------------ loadgen
+
+
+def test_gamma_arrivals_rate_and_cv():
+    rng = np.random.default_rng(0)
+    times = loadgen.gamma_arrivals(5.0, 2.0, 2000.0, rng)
+    rate = len(times) / 2000.0
+    assert 4.5 < rate < 5.5
+    gaps = np.diff(times)
+    cv = gaps.std() / gaps.mean()
+    assert 1.7 < cv < 2.3
+
+
+def test_burst_profile_has_burst():
+    base = 2.0
+    peak = max(
+        loadgen.burstgpt_like_rate_profile(t, base) for t in np.arange(0, 900, 5)
+    )
+    trough = min(
+        loadgen.burstgpt_like_rate_profile(t, base) for t in np.arange(0, 900, 5)
+    )
+    assert peak / trough > 3.0
+
+
+def test_onoff_arrivals_silent_in_off():
+    rng = np.random.default_rng(0)
+    times = loadgen.onoff_arrivals(10.0, on_len=60.0, off_len=60.0,
+                                   duration=240.0, rng=rng)
+    off_window = [t for t in times if 60.0 <= t < 120.0]
+    assert not off_window
+    on_window = [t for t in times if 0 <= t < 60.0]
+    assert len(on_window) > 300
