@@ -1,0 +1,16 @@
+# Tier-1 verify (ROADMAP.md): offline-safe, fails on collection errors.
+PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+export PYTHONPATH
+
+.PHONY: test test-fast bench
+
+test:
+	python -m pytest -x -q
+
+# skip the two slowest modules (kernel interpret sweeps + model numerics)
+test-fast:
+	python -m pytest -x -q --ignore=tests/test_kernels.py \
+	    --ignore=tests/test_models.py
+
+bench:
+	python -m benchmarks.paged_decode_bench

@@ -24,15 +24,21 @@ cfg = get_config("gemma-7b").reduced()
 params = tf.init_params(cfg, jax.random.PRNGKey(0))
 
 # --- offline profiling phase (paper §4.5) --------------------------------
+# the probe drives the same paged prefill path the serving engine executes,
+# so the calibrated cost model matches the layout actually served
 probe = RealEngine(cfg, params)
+assert probe.paged
 
 
 def measure(shape: BatchShape) -> float:
-    """Execute a prefill of the given token count and time it."""
+    """Execute a paged prefill of the given token count and time it."""
     toks = np.zeros((1, max(1, shape.prefill_tokens)), np.int32)
-    caches = tf.init_caches(cfg, 1, max(8, shape.prefill_tokens))
+    tables = np.arange(probe._table_width, dtype=np.int32)[None]
     t0 = time.perf_counter()
-    probe._prefill_jit(toks, caches, np.zeros(1, np.int32), None)[0].block_until_ready()
+    logits, probe.pools = probe._prefill_jit(
+        toks, probe.pools, tables, np.zeros(1, np.int32)
+    )
+    logits.block_until_ready()
     return time.perf_counter() - t0
 
 

@@ -145,6 +145,53 @@ class Checkpointer:
 # ---------------------------------------------------------------------------
 
 
+class HostKVStore:
+    """Host-memory staging store for checkpointed / swapped-out KV blocks.
+
+    Keyed by (seq_id, block_index): the logical identity of a block within
+    its sequence.  The *physical* ids (device block for the pool copy, host
+    block from the BlockManager's table) stay in the manager's accounting —
+    this store only holds the bytes, so restores are O(block) pool writes
+    keyed by whatever physical block the resume re-allocated (§4.4).
+    """
+
+    def __init__(self):
+        self._blocks: Dict[Tuple[int, int], object] = {}
+        self.bytes_stored = 0
+
+    @staticmethod
+    def _nbytes(block) -> int:
+        import jax
+
+        return sum(getattr(l, "nbytes", 0) for l in jax.tree.leaves(block))
+
+    def put(self, seq_id: int, block_index: int, block) -> None:
+        self.pop(seq_id, block_index)
+        self._blocks[(seq_id, block_index)] = block
+        self.bytes_stored += self._nbytes(block)
+
+    def get(self, seq_id: int, block_index: int):
+        return self._blocks.get((seq_id, block_index))
+
+    def pop(self, seq_id: int, block_index: int) -> None:
+        old = self._blocks.pop((seq_id, block_index), None)
+        if old is not None:
+            self.bytes_stored -= self._nbytes(old)
+
+    def drop_seq(self, seq_id: int) -> None:
+        for key in [k for k in self._blocks if k[0] == seq_id]:
+            self.pop(*key)
+
+    def seq_ids(self):
+        return {k[0] for k in self._blocks}
+
+    def __len__(self) -> int:
+        return len(self._blocks)
+
+
+# ---------------------------------------------------------------------------
+
+
 @dataclass
 class HostIOTracker:
     """Backlog model of the device↔host link for background I/O.

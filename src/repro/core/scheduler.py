@@ -100,8 +100,11 @@ class UnifiedScheduler:
         self.preempt_flag: bool = False  # shared with the worker (Alg. 2)
         self._clock = clock or (lambda: 0.0)
         # engine hooks ----------------------------------------------------
-        # events: ("preempt_discard"|"preempt_swap"|"resume", req, n_blocks)
-        self.events: List[Tuple[str, Request, int]] = []
+        # events: ("preempt_discard"|"preempt_swap"|"resume", req, payload)
+        # payload is the block-manager copy/free list for the transition
+        # (len == number of blocks moved); the real engine uses the physical
+        # ids, the sim engine only accounts the bytes.
+        self.events: List[Tuple[str, Request, list]] = []
         # gate for background swap-in admission (None = always allow)
         self.io_gate: Optional[Callable[[], bool]] = None
 
@@ -186,16 +189,18 @@ class UnifiedScheduler:
             req.request_id
         ):
             try:
+                # copies: (block_index, device_block, host_block) triples —
+                # the engine extracts these pool blocks before reuse
                 copies = self.blocks.preempt_swap_out(req.request_id)
                 recoverable = req.total_len
-                self.events.append(("preempt_swap", req, len(copies)))
+                self.events.append(("preempt_swap", req, copies))
                 swapped = True
             except OutOfBlocks:
                 pass  # host pool full: fall back to discard (vLLM behaviour)
         if not swapped:
-            self.blocks.preempt_discard(req.request_id)
+            _, freed = self.blocks.preempt_discard(req.request_id)
             recoverable = self.blocks.tokens_recoverable_from_host(req.request_id)
-            self.events.append(("preempt_discard", req, 0))
+            self.events.append(("preempt_discard", req, freed))
         req.on_preempt(recoverable)
         self.running.remove(req)
         self.preempted.append(req)
@@ -422,7 +427,7 @@ class UnifiedScheduler:
                 still.append(r)
                 continue
             copies = self.blocks.resume(r.request_id)
-            self.events.append(("resume", r, len(copies)))
+            self.events.append(("resume", r, copies))
             # tokens recoverable from host come back via (background) swap-in;
             # the rest is recompute -> prefill chunks
             r.num_prefilled = r.host_recoverable

@@ -50,12 +50,17 @@ def flash_attention(q, k, v, *, causal=True, sliding_window=0, q_offset=0,
     )
 
 
-def paged_attention(q, k_pool, v_pool, block_tables, seq_lens):
+def paged_attention(q, k_pool, v_pool, block_tables, seq_lens, *,
+                    logit_softcap=0.0):
     be = kernel_backend()
     if be == "ref":
-        return ref.paged_attention_ref(q, k_pool, v_pool, block_tables, seq_lens)
+        return ref.paged_attention_ref(
+            q, k_pool, v_pool, block_tables, seq_lens,
+            logit_softcap=logit_softcap,
+        )
     return _paged_pallas(
-        q, k_pool, v_pool, block_tables, seq_lens, interpret=(be == "interpret")
+        q, k_pool, v_pool, block_tables, seq_lens,
+        logit_softcap=logit_softcap, interpret=(be == "interpret"),
     )
 
 

@@ -38,6 +38,7 @@ def _paged_kernel(
     scale: float,
     page: int,
     pages_per_seq: int,
+    logit_softcap: float,
 ):
     b = pl.program_id(0)
     mi = pl.program_id(2)
@@ -59,6 +60,8 @@ def _paged_kernel(
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         ) * scale  # (G, page)
+        if logit_softcap:
+            s = jnp.tanh(s / logit_softcap) * logit_softcap
         tok = page_start + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
         s = jnp.where(tok < seq_len, s, NEG_INF)
 
@@ -80,7 +83,7 @@ def _paged_kernel(
         o_ref[0, 0, :, :] = (acc_ref[...] / safe_l).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "logit_softcap"))
 def paged_attention(
     q: jnp.ndarray,  # (B, H, D)
     k_pool: jnp.ndarray,  # (N, page, Hkv, D)
@@ -88,6 +91,7 @@ def paged_attention(
     block_tables: jnp.ndarray,  # (B, M) int32, -1 padded
     seq_lens: jnp.ndarray,  # (B,) int32 — valid tokens (incl. current)
     *,
+    logit_softcap: float = 0.0,
     interpret: bool = False,
 ) -> jnp.ndarray:
     """Returns (B, H, D)."""
@@ -124,7 +128,8 @@ def paged_attention(
     )
     out = pl.pallas_call(
         functools.partial(
-            _paged_kernel, scale=d**-0.5, page=page, pages_per_seq=m
+            _paged_kernel, scale=d**-0.5, page=page, pages_per_seq=m,
+            logit_softcap=logit_softcap,
         ),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),

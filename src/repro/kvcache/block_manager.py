@@ -84,6 +84,18 @@ class BlockManager:
     def blocks_for_tokens(self, num_tokens: int) -> int:
         return math.ceil(num_tokens / self.block_size) if num_tokens else 0
 
+    def block_table(self, seq_id: int, width: int, pad: int = -1) -> List[int]:
+        """Physical device-block table row for a resident sequence, padded
+        to ``width`` entries — the addressing row the paged attention
+        kernels consume."""
+        sb = self._seqs[seq_id]
+        if len(sb.device_blocks) > width:
+            raise ValueError(
+                f"seq {seq_id}: {len(sb.device_blocks)} blocks exceed table "
+                f"width {width}"
+            )
+        return sb.device_blocks + [pad] * (width - len(sb.device_blocks))
+
     def can_allocate(self, seq_id: int, new_total_tokens: int) -> bool:
         cur = self._seqs.get(seq_id)
         have = len(cur.device_blocks) if cur and cur.on_device else 0
@@ -196,10 +208,12 @@ class BlockManager:
         partial = 1 if sb.num_tokens % self.block_size else 0
         return (unck + partial) * bytes_per_block
 
-    def preempt_swap_out(self, seq_id: int) -> List[Tuple[int, int]]:
+    def preempt_swap_out(self, seq_id: int) -> List[Tuple[int, int, int]]:
         """Preempt by full swap-out: every device block gets a host copy
         (reusing existing checkpoints), then device blocks are freed.
-        Returns (device_block, host_block) copies the engine must perform.
+        Returns (block_index, device_block, host_block) copies the engine
+        must perform — the index keys the engine's host store, the device
+        id addresses the paged pool.
         Atomic: raises OutOfBlocks (without mutating) if the host pool
         cannot take the un-checkpointed blocks — callers fall back to
         discard, as vLLM does."""
@@ -211,7 +225,7 @@ class BlockManager:
         for i, db in enumerate(sb.device_blocks):
             if sb.host_blocks[i] < 0:
                 sb.host_blocks[i] = self._free_host.pop()
-                copies.append((db, sb.host_blocks[i]))
+                copies.append((i, db, sb.host_blocks[i]))
         for b in sb.device_blocks:
             self._free_device.append(b)
         sb.device_blocks = []

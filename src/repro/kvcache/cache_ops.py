@@ -23,14 +23,59 @@ def append_paged(
     block_tables: jnp.ndarray,  # (B, M)
     seq_lens: jnp.ndarray,  # (B,) length BEFORE the append
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Scatter one new token per sequence into its tail block."""
+    """Scatter one new token per sequence into its tail block.
+
+    Negative (padding) table entries drop the write instead of aliasing a
+    real block — padded batch rows are harmless by construction."""
     bs = k_pool.shape[1]
     block_idx = seq_lens // bs
     offset = seq_lens % bs
     rows = jnp.take_along_axis(block_tables, block_idx[:, None], axis=1)[:, 0]
-    k_pool = k_pool.at[rows, offset].set(k_new)
-    v_pool = v_pool.at[rows, offset].set(v_new)
+    rows = jnp.where(rows >= 0, rows, k_pool.shape[0])  # pad -> OOB -> drop
+    k_pool = k_pool.at[rows, offset].set(k_new, mode="drop")
+    v_pool = v_pool.at[rows, offset].set(v_new, mode="drop")
     return k_pool, v_pool
+
+
+def write_paged_chunk(
+    k_pool: jnp.ndarray,
+    v_pool: jnp.ndarray,
+    k_new: jnp.ndarray,  # (B, L, Hkv, D) — chunked-prefill tokens
+    v_new: jnp.ndarray,
+    block_tables: jnp.ndarray,  # (B, M)
+    positions: jnp.ndarray,  # (B, L) absolute token positions of the chunk
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Scatter a multi-token prefill chunk into each sequence's blocks.
+
+    The engine allocates blocks covering every position before dispatch, so
+    each (position // block_size) indexes a valid table column.  Positions
+    landing on padding (negative table entries, or beyond the table width)
+    drop the write rather than aliasing a real block.
+    """
+    bs = k_pool.shape[1]
+    m = block_tables.shape[1]
+    in_table = positions // bs < m  # (B, L)
+    block_idx = jnp.clip(positions // bs, 0, m - 1)
+    offsets = positions % bs
+    rows = jnp.take_along_axis(block_tables, block_idx, axis=1)  # (B, L)
+    rows = jnp.where((rows >= 0) & in_table, rows, k_pool.shape[0])  # drop
+    k_pool = k_pool.at[rows, offsets].set(k_new, mode="drop")
+    v_pool = v_pool.at[rows, offsets].set(v_new, mode="drop")
+    return k_pool, v_pool
+
+
+def extract_block(pool: jnp.ndarray, block_id) -> jnp.ndarray:
+    """O(block) copy out of the pool by *physical* id: (bs, Hkv, D).
+
+    This (with ``write_block``) is the incremental-checkpoint unit — a
+    preempt/resume moves whole physical blocks, never per-request pytrees.
+    """
+    return pool[block_id]
+
+
+def write_block(pool: jnp.ndarray, block_id, data: jnp.ndarray) -> jnp.ndarray:
+    """O(block) restore of one physical block (swap-in / resume)."""
+    return pool.at[block_id].set(data)
 
 
 def gather_paged(
@@ -57,6 +102,7 @@ def paged_attention_ref(
     v_pool: jnp.ndarray,
     block_tables: jnp.ndarray,  # (B, M)
     seq_lens: jnp.ndarray,  # (B,) tokens valid in the cache (incl. current)
+    logit_softcap: float = 0.0,
 ) -> jnp.ndarray:
     """Oracle decode attention over the paged pool. Returns (B, H, D)."""
     b, h, d = q.shape
@@ -69,6 +115,8 @@ def paged_attention_ref(
     g = h // hkv
     qg = q.reshape(b, hkv, g, d).astype(jnp.float32)
     scores = jnp.einsum("bhgd,bthd->bhgt", qg, k.astype(jnp.float32)) * d**-0.5
+    if logit_softcap:
+        scores = jnp.tanh(scores / logit_softcap) * logit_softcap
     valid = jnp.arange(max_ctx)[None, :] < seq_lens[:, None]  # (B, T)
     scores = jnp.where(valid[:, None, None, :], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1)

@@ -392,6 +392,89 @@ def cached_attention(
 
 
 # ---------------------------------------------------------------------------
+# Paged attention (shared block pool, block-table addressed)
+#
+# The paged cache for one layer is {"k", "v"}: (num_blocks, bs, Hkv, D) —
+# a slice of the engine-owned shared pool.  Sequences address it through
+# ``block_tables`` (B, M); slot for absolute position p is
+# (table[p // bs], p % bs).  Keys are stored roped, exactly like the
+# contiguous cache, so preempt/resume restores are bitwise exact.
+#
+# Padding: negative table entries are read as zeros on the gather path and
+# *drop* writes on the scatter path; the engine additionally points padded
+# batch rows at a dedicated scratch block so their shapes stay uniform.
+# ---------------------------------------------------------------------------
+
+
+def paged_prefill_attention(
+    cfg: ModelConfig,
+    p: Params,
+    x: jnp.ndarray,  # (B, L, d_model) — prefill chunk
+    pool: Dict[str, jnp.ndarray],
+    block_tables: jnp.ndarray,  # (B, M)
+    positions: jnp.ndarray,  # (B, L) absolute positions of the chunk
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Chunked prefill against the shared paged pool.
+
+    Scatters the chunk's roped KV into the pool, then attends causally over
+    the gathered per-sequence context (the jnp path; block tables make the
+    gather order identical to the logical position order, so numerics match
+    the contiguous cache exactly).
+    """
+    from repro.kvcache.cache_ops import gather_paged, write_paged_chunk
+
+    q, k, v = project_qkv(cfg, p, x)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    k_pool, v_pool = write_paged_chunk(
+        pool["k"], pool["v"], k, v, block_tables, positions
+    )
+    bs = k_pool.shape[1]
+    max_ctx = block_tables.shape[1] * bs
+    kk = gather_paged(k_pool, block_tables, max_ctx)  # (B, T, Hkv, D)
+    vv = gather_paged(v_pool, block_tables, max_ctx)
+    b = x.shape[0]
+    kv_pos = jnp.broadcast_to(
+        jnp.arange(max_ctx, dtype=jnp.int32), (b, max_ctx)
+    )
+    # Causal masking doubles as the validity mask: slots at kv_pos <= q_pos
+    # were all written by this sequence; later slots (incl. scratch-padded
+    # columns) are excluded.  Paged mode never runs sliding-window archs.
+    mask = causal_mask(positions, kv_pos)
+    attn = gqa_scores_softmax_values(q, kk, vv, mask, cfg.logit_softcap)
+    return out_proj(p, attn), {"k": k_pool, "v": v_pool}
+
+
+def paged_decode_attention(
+    cfg: ModelConfig,
+    p: Params,
+    x: jnp.ndarray,  # (B, 1, d_model)
+    pool: Dict[str, jnp.ndarray],
+    block_tables: jnp.ndarray,  # (B, M)
+    positions: jnp.ndarray,  # (B, 1) — the new token's absolute position
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One-token decode against the shared paged pool.
+
+    Dispatches to the Pallas ``paged_attention`` kernel on TPU and the
+    ``cache_ops`` jnp oracle on CPU (see ``repro.kernels.ops``).
+    """
+    from repro.kernels import ops as kernel_ops
+    from repro.kvcache.cache_ops import append_paged
+
+    q, k, v = project_qkv(cfg, p, x)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    k_pool, v_pool = append_paged(
+        pool["k"], pool["v"], k[:, 0], v[:, 0], block_tables, positions[:, 0]
+    )
+    out = kernel_ops.paged_attention(
+        q[:, 0], k_pool, v_pool, block_tables, positions[:, 0] + 1,
+        logit_softcap=cfg.logit_softcap,
+    )
+    return out_proj(p, out[:, None]), {"k": k_pool, "v": v_pool}
+
+
+# ---------------------------------------------------------------------------
 # Cross-attention (VLM): q from text, static k/v from image embeddings
 # ---------------------------------------------------------------------------
 

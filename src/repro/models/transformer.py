@@ -44,6 +44,8 @@ from .layers import (
     init_attention,
     init_mlp,
     mlp,
+    paged_decode_attention,
+    paged_prefill_attention,
     project_cross_kv,
     rmsnorm,
 )
@@ -141,6 +143,43 @@ def cache_capacity(cfg: ModelConfig, max_seq: int) -> int:
     return min(max_seq, cfg.sliding_window) if cfg.sliding_window else max_seq
 
 
+def supports_paged(cfg: ModelConfig) -> bool:
+    """True iff every layer holds plain causal full-attention KV.
+
+    SSM/hybrid recurrent state, sliding-window ring buffers, static
+    cross-attn KV and encoder-only archs keep the contiguous per-request
+    fallback (capability matrix in DESIGN.md §5)."""
+    return (
+        cfg.causal
+        and not cfg.has_ssm_state
+        and not cfg.cross_attn_period
+        and not cfg.sliding_window
+        and all(s.mixer == MIXER_ATTN for s in cfg.layer_pattern())
+    )
+
+
+def init_paged_pools(
+    cfg: ModelConfig,
+    num_blocks: int,
+    block_size: int,
+    dtype=jnp.float32,
+) -> Dict[str, PyTree]:
+    """Shared physical KV pools, one {"k","v"} pair per pattern position.
+
+    Leaves are (num_periods, num_blocks, block_size, Hkv, D) — the same
+    period-major stacking as params/caches, so the period scan and the
+    segment slicing helpers apply unchanged.  Every resident sequence lives
+    in these pools, addressed via block tables of physical block ids."""
+    if not supports_paged(cfg):
+        raise ValueError(f"{cfg.name}: paged pools require plain causal KV")
+    hd = cfg.resolved_head_dim
+    shape = (cfg.num_periods, num_blocks, block_size, cfg.num_kv_heads, hd)
+    return {
+        str(i): {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+        for i, _ in enumerate(cfg.layer_pattern())
+    }
+
+
 def init_caches(
     cfg: ModelConfig,
     batch: int,
@@ -191,6 +230,7 @@ def _apply_layer(
     valid: Optional[jnp.ndarray],
     img_x: Optional[jnp.ndarray],
     capacity_factor: float,
+    block_tables: Optional[jnp.ndarray] = None,  # paged physical layout
 ) -> Tuple[jnp.ndarray, Optional[PyTree], jnp.ndarray]:
     """Returns (x_out, new_cache, aux_loss).
 
@@ -225,7 +265,16 @@ def _apply_layer(
         h = constrain_block_input(h, weight_bytes=attn_w, force=force)
 
     if spec.mixer == MIXER_ATTN:
-        if mode == "full":
+        if block_tables is not None:  # shared paged pool (serving hot path)
+            attn_fn = (
+                paged_decode_attention
+                if mode == "decode"
+                else paged_prefill_attention
+            )
+            mix, new_cache = attn_fn(
+                cfg, lp["mixer"], h, cache, block_tables, positions
+            )
+        elif mode == "full":
             mix = dense_attention(cfg, lp["mixer"], h, positions)
             new_cache = cache
             if cache is not None:
@@ -301,6 +350,7 @@ def run_periods(
     img_x: Optional[jnp.ndarray] = None,
     capacity_factor: float = 1.25,
     remat: bool = False,
+    block_tables: Optional[jnp.ndarray] = None,  # paged: caches are pools
 ) -> Tuple[jnp.ndarray, Optional[Dict[str, PyTree]], jnp.ndarray]:
     """Scan the pattern periods. Returns (x, new_caches, total_aux)."""
     pattern = cfg.layer_pattern()
@@ -325,6 +375,7 @@ def run_periods(
                 valid=valid,
                 img_x=img_x,
                 capacity_factor=capacity_factor,
+                block_tables=block_tables,
             )
             if cache_in is not None:
                 new_caches[str(i)] = c_out
@@ -461,6 +512,90 @@ def decode_step(
         capacity_factor=capacity_factor,
     )
     return lm_head(cfg, params, x)[:, 0, :], caches
+
+
+# ---------------------------------------------------------------------------
+# Paged entry points (shared block pool; see init_paged_pools)
+# ---------------------------------------------------------------------------
+
+
+def prefill_chunk_paged(
+    cfg: ModelConfig,
+    params: PyTree,
+    tokens: jnp.ndarray,  # (B, L) chunk tokens
+    pools: Dict[str, PyTree],
+    block_tables: jnp.ndarray,  # (B, M) physical block ids
+    offsets: jnp.ndarray,  # (B,) tokens already prefilled per sequence
+) -> Tuple[jnp.ndarray, Dict[str, PyTree]]:
+    """Chunked prefill on the paged layout. Returns (last logits, pools)."""
+    x = embed(cfg, params, tokens)
+    b, l = tokens.shape[:2]
+    positions = offsets[:, None] + jnp.arange(l, dtype=jnp.int32)[None, :]
+    x, pools, _ = run_periods(
+        cfg,
+        params["layers"],
+        x,
+        mode="prefill",
+        positions=positions,
+        caches=pools,
+        block_tables=block_tables,
+        capacity_factor=-1.0,
+    )
+    return lm_head(cfg, params, x)[:, -1, :], pools
+
+
+def decode_step_paged(
+    cfg: ModelConfig,
+    params: PyTree,
+    last_tokens: jnp.ndarray,  # (B,) int32
+    pools: Dict[str, PyTree],
+    block_tables: jnp.ndarray,  # (B, M)
+    seq_lens: jnp.ndarray,  # (B,) current lengths (new token position)
+) -> Tuple[jnp.ndarray, Dict[str, PyTree]]:
+    """One decode iteration on the paged layout. Returns (logits, pools)."""
+    x = embed(cfg, params, last_tokens[:, None])
+    positions = seq_lens[:, None]
+    x, pools, _ = run_periods(
+        cfg,
+        params["layers"],
+        x,
+        mode="decode",
+        positions=positions,
+        caches=pools,
+        block_tables=block_tables,
+        capacity_factor=-1.0,
+    )
+    return lm_head(cfg, params, x)[:, 0, :], pools
+
+
+def run_segment_paged(
+    cfg: ModelConfig,
+    params: PyTree,
+    seg: int,
+    x: jnp.ndarray,
+    pools: Dict[str, PyTree],
+    block_tables: jnp.ndarray,
+    positions: jnp.ndarray,
+) -> Tuple[jnp.ndarray, Dict[str, PyTree]]:
+    """One preemptible decode segment on the paged layout (§4.3 safepoints).
+
+    Pool writes of an aborted iteration land at the not-yet-committed
+    position and are overwritten verbatim on re-execution, so aborts stay
+    stateless exactly as in the contiguous path."""
+    lo, hi = segment_bounds(cfg, seg)
+    lp = slice_periods(params["layers"], lo, hi)
+    ps = slice_periods(pools, lo, hi)
+    x, ps_new, _ = run_periods(
+        cfg,
+        lp,
+        x,
+        mode="decode",
+        positions=positions,
+        caches=ps,
+        block_tables=block_tables,
+        capacity_factor=-1.0,
+    )
+    return x, merge_periods(pools, ps_new, lo, hi)
 
 
 # ---------------------------------------------------------------------------

@@ -244,7 +244,8 @@ class SimEngine:
     def _process_events(self, plan: IterationPlan) -> float:
         """Consume scheduler events; returns blocking seconds to add."""
         blocking = 0.0
-        for kind, req, n_blocks in self.sched.events:
+        for kind, req, payload in self.sched.events:
+            n_blocks = len(payload)
             nbytes = n_blocks * self.bytes_per_block
             if kind == "preempt_swap":
                 # no IC: swap-out stalls the pipeline (vLLM++ behaviour)

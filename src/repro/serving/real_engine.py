@@ -9,34 +9,46 @@ to an uninterrupted run (greedy sampling) — checkpoint/restore and the
 recompute path are exact.
 
 Implementation notes:
-* Per-request KV caches (contiguous layout, capacity = max_model_len);
-  decode batches are formed by stacking cache pytrees (fine at test scale;
-  the TPU-target physical layout is the paged pool + Pallas kernels,
-  validated separately in tests/test_kernels.py).
-* Incremental checkpointing extracts completed 16-token KV slot ranges to a
-  host store (numpy); restore writes them back and the scheduler re-runs the
-  un-checkpointed tail as recompute prefill — exactly the paper's resume
-  path.  SSM/hybrid and ring-buffer (sliding-window) archs fall back to
-  full recompute on preemption (checkpointing disabled; see DESIGN.md §4).
+* Physical KV layout is the *paged* shared pool (DESIGN.md §5): per-layer
+  pools ``(num_device_blocks+1, block_size, Hkv, D)`` addressed via block
+  tables built from the BlockManager's physical block ids; decode dispatches
+  to the Pallas ``paged_attention`` kernel on TPU and the ``cache_ops`` jnp
+  oracle on CPU.  The last pool row is a scratch block that absorbs writes
+  from padded batch rows.
+* Decode batches are formed at fixed bucketed shapes (batch padded to the
+  next power of two, block tables/seq_lens padded to full width) so jit
+  recompilation is bounded by the bucket count, not by every batch size —
+  ``decode_trace_count`` counts actual retraces.
+* Incremental checkpointing copies completed blocks out of the pool by
+  physical id into a ``HostKVStore`` (O(block), no pytree slicing); restore
+  scatters them back into whatever physical blocks the resume re-allocated.
+  Preemption-by-discard therefore costs zero device I/O — pure table edits.
+* Archs without plain causal KV (SSM/hybrid, sliding-window ring, cross-attn
+  VLM, encoder-only) fall back to the contiguous per-request layout
+  (capacity = max_model_len) with full-recompute resume (DESIGN.md §4).
 * Safepoints: pure-offline decode iterations execute as K-layer segments via
-  ``transformer.run_segment`` with the preemption flag checked between
-  dispatches (``core.preemption.SegmentedExecution``).
+  ``transformer.run_segment[_paged]`` with the preemption flag checked
+  between dispatches (``core.preemption.SegmentedExecution``).
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.checkpoint import AdaptiveCheckpointPolicy, Checkpointer
-from repro.core.preemption import PreemptionFlag, SafepointStats, SegmentedExecution
+from repro.core.checkpoint import (
+    AdaptiveCheckpointPolicy,
+    Checkpointer,
+    HostKVStore,
+)
+from repro.core.preemption import PreemptionFlag, SegmentedExecution
 from repro.core.profiler import AnalyticalCostModel, block_bytes, TPU_V5E
-from repro.core.request import Phase, Priority, Request
-from repro.core.scheduler import IterationPlan, SchedulerConfig, UnifiedScheduler
+from repro.core.request import Request
+from repro.core.scheduler import SchedulerConfig, UnifiedScheduler
 from repro.core.slo import SLO
 from repro.kvcache.block_manager import BlockManager
 from repro.models import transformer as tf
@@ -53,6 +65,8 @@ class RealEngineConfig:
     enable_checkpointing: bool = True
     enable_safepoints: bool = True
     max_steps: int = 100_000
+    # "auto": paged when the arch supports it; "paged"/"contiguous" force.
+    backend: str = "auto"
 
 
 class RealEngine:
@@ -79,6 +93,13 @@ class RealEngine:
         )
         lat = AnalyticalCostModel(cfg, TPU_V5E)  # used only if slo_aware
         self.sched = UnifiedScheduler(cfg, lat, slo, self.blocks, sched_cfg)
+
+        if eng_cfg.backend not in ("auto", "paged", "contiguous"):
+            raise ValueError(f"unknown backend {eng_cfg.backend!r}")
+        if eng_cfg.backend == "paged" and not tf.supports_paged(cfg):
+            raise ValueError(f"{cfg.name}: arch cannot run the paged backend")
+        self.paged = eng_cfg.backend != "contiguous" and tf.supports_paged(cfg)
+
         # KV-block checkpoint/restore is exact for plain causal-attention
         # archs; SSM state, ring-buffer (SWA) caches and static cross-attn KV
         # resume via full recompute instead (DESIGN.md §4).
@@ -97,30 +118,86 @@ class RealEngine:
         )
         self.flag = PreemptionFlag()
         self.safepoints = SegmentedExecution(self.flag)
-        self.caches: Dict[int, Any] = {}  # request_id -> cache pytree (B=1)
-        self.host_store: Dict[Tuple[int, int], Any] = {}  # (req, block) -> slots
+        self.host = HostKVStore()  # (seq, block_index) -> KV block bytes
         self.steps = 0
         self._key = jax.random.PRNGKey(0)
-        # jitted entry points (recompile per batch size — fine at test scale)
-        self._decode_jit = jax.jit(
-            lambda last, caches, lens: tf.decode_step(
-                self.cfg, self.params, last, caches, lens
-            ),
-            donate_argnums=(1,),  # in-place cache update (TPU semantics)
-        )
-        self._segment_jit = jax.jit(
-            lambda seg, x, caches, positions: tf.run_segment(
-                self.cfg, self.params, seg, x, caches,
-                mode="decode", positions=positions,
-            ),
-            static_argnums=(0,),
-            donate_argnums=(2,),
-        )
-        self._prefill_jit = jax.jit(
-            lambda toks, caches, off, img: tf.prefill_chunk(
-                self.cfg, self.params, toks, caches, off, image_embeds=img
+        self.decode_trace_count = 0  # jit retraces of the decode entry point
+
+        if self.paged:
+            # Shared physical pools + one scratch row (id num_device_blocks)
+            # that absorbs writes from padded batch rows / padded table
+            # columns; real sequences never reference it.
+            self._scratch_block = eng_cfg.num_device_blocks
+            self._table_width = self.blocks.blocks_for_tokens(
+                eng_cfg.max_model_len
             )
-        )
+            self.pools = tf.init_paged_pools(
+                cfg, eng_cfg.num_device_blocks + 1, eng_cfg.block_size
+            )
+
+            def _decode_paged(last, pools, tables, lens):
+                self.decode_trace_count += 1  # runs only while tracing
+                return tf.decode_step_paged(
+                    self.cfg, self.params, last, pools, tables, lens
+                )
+
+            self._decode_jit = jax.jit(_decode_paged, donate_argnums=(1,))
+            self._prefill_jit = jax.jit(
+                lambda toks, pools, tables, off: tf.prefill_chunk_paged(
+                    self.cfg, self.params, toks, pools, tables, off
+                ),
+                donate_argnums=(1,),
+            )
+            self._segment_jit = jax.jit(
+                lambda seg, x, pools, tables, positions: tf.run_segment_paged(
+                    self.cfg, self.params, seg, x, pools, tables, positions
+                ),
+                static_argnums=(0,),
+                donate_argnums=(2,),
+            )
+
+            def _restore(pools, ids, blocks):
+                return {
+                    pos: {
+                        "k": pool["k"].at[:, ids].set(blocks[pos]["k"]),
+                        "v": pool["v"].at[:, ids].set(blocks[pos]["v"]),
+                    }
+                    for pos, pool in pools.items()
+                }
+
+            self._restore_jit = jax.jit(_restore, donate_argnums=(0,))
+
+            def _extract(pools, ids):
+                return {
+                    pos: {"k": pool["k"][:, ids], "v": pool["v"][:, ids]}
+                    for pos, pool in pools.items()
+                }
+
+            self._extract_jit = jax.jit(_extract)
+        else:
+            self.caches: Dict[int, Any] = {}  # request_id -> cache pytree (B=1)
+
+            def _decode(last, caches, lens):
+                self.decode_trace_count += 1  # runs only while tracing
+                return tf.decode_step(self.cfg, self.params, last, caches, lens)
+
+            self._decode_jit = jax.jit(
+                _decode,
+                donate_argnums=(1,),  # in-place cache update (TPU semantics)
+            )
+            self._segment_jit = jax.jit(
+                lambda seg, x, caches, positions: tf.run_segment(
+                    self.cfg, self.params, seg, x, caches,
+                    mode="decode", positions=positions,
+                ),
+                static_argnums=(0,),
+                donate_argnums=(2,),
+            )
+            self._prefill_jit = jax.jit(
+                lambda toks, caches, off, img: tf.prefill_chunk(
+                    self.cfg, self.params, toks, caches, off, image_embeds=img
+                )
+            )
 
     # ------------------------------------------------------------------ api
     def submit(self, req: Request) -> None:
@@ -141,7 +218,53 @@ class RealEngine:
             [np.asarray(req.prompt, np.int32), np.asarray(req.output_tokens, np.int32)]
         )
 
-    # ---------------------------------------------------------------- caches
+    # ----------------------------------------------------------- paged layout
+    def _block_table(self, rid: int) -> np.ndarray:
+        return np.asarray(
+            self.blocks.block_table(
+                rid, self._table_width, pad=self._scratch_block
+            ),
+            np.int32,
+        )
+
+    @staticmethod
+    def _decode_bucket(n: int) -> int:
+        b = 1
+        while b < n:
+            b *= 2
+        return b
+
+    def _extract_blocks_paged(self, dev_blocks: List[int]) -> List[Any]:
+        """Pack the selected physical blocks with one jitted gather and pull
+        them to host in a single transfer (the CPU twin of the Pallas
+        ``kv_checkpoint`` staging-DMA path); returns one stored dict per
+        block, in ``dev_blocks`` order."""
+        ids = jnp.asarray(dev_blocks, jnp.int32)
+        staged = jax.device_get(self._extract_jit(self.pools, ids))
+        return [
+            {
+                pos: {"k": b["k"][:, i], "v": b["v"][:, i]}
+                for pos, b in staged.items()
+            }
+            for i in range(len(dev_blocks))
+        ]
+
+    def _restore_blocks_paged(self, dev_blocks: List[int], stored: List[Any]):
+        """Scatter host-stored blocks into (re-allocated) physical pool
+        slots — the paper's near-zero-cost resume path.  One jitted donated
+        scatter per resume, so the update is in-place O(restored bytes)
+        rather than a pool copy per block."""
+        ids = jnp.asarray(dev_blocks, jnp.int32)
+        batched = {
+            pos: {
+                "k": jnp.stack([s[pos]["k"] for s in stored], axis=1),
+                "v": jnp.stack([s[pos]["v"] for s in stored], axis=1),
+            }
+            for pos in stored[0]
+        }
+        self.pools = self._restore_jit(self.pools, ids, batched)
+
+    # ------------------------------------------------------ contiguous layout
     def _fresh_cache(self, req: Request) -> Any:
         return tf.init_caches(self.cfg, 1, self.ec.max_model_len)
 
@@ -179,28 +302,48 @@ class RealEngine:
 
     # ---------------------------------------------------------------- events
     def _process_events(self) -> None:
-        for kind, req, _n in self.sched.events:
+        for kind, req, payload in self.sched.events:
             rid = req.request_id
             if kind in ("preempt_discard", "preempt_swap"):
                 if kind == "preempt_swap":
-                    # blocking swap-out: extract every complete block now
-                    cache = self.caches.get(rid)
-                    if cache is not None:
-                        nblocks = req.total_len // self.ec.block_size
-                        for b in range(nblocks):
-                            self.host_store[(rid, b)] = self._extract_block(
-                                cache, b
-                            )
-                self.caches.pop(rid, None)
+                    # blocking swap-out: copy the un-checkpointed blocks now
+                    # (checkpointed ones are already in the host store)
+                    if self.paged and payload:
+                        stored = self._extract_blocks_paged(
+                            [dev for _idx, dev, _host in payload]
+                        )
+                        for (idx, _dev, _host), blk in zip(payload, stored):
+                            self.host.put(rid, idx, blk)
+                    elif not self.paged:
+                        cache = self.caches.get(rid)
+                        for idx, _dev, _host in payload:
+                            if cache is not None:
+                                self.host.put(
+                                    rid, idx, self._extract_block(cache, idx)
+                                )
+                # discard costs zero device I/O: pure table edits (§4.4)
+                if not self.paged:
+                    self.caches.pop(rid, None)
                 self.ckpt.unmark(req)
             elif kind == "resume":
-                cache = self._fresh_cache(req)
-                nrec = req.host_recoverable // self.ec.block_size
-                for b in range(nrec):
-                    stored = self.host_store.get((rid, b))
-                    if stored is not None:
-                        cache = self._restore_block(cache, b, stored)
-                self.caches[rid] = cache
+                nrec = self.blocks.blocks_for_tokens(req.host_recoverable)
+                if self.paged:
+                    sb = self.blocks.seq(rid)
+                    devs, blks = [], []
+                    for b in range(nrec):
+                        stored = self.host.get(rid, b)
+                        if stored is not None:
+                            devs.append(sb.device_blocks[b])
+                            blks.append(stored)
+                    if devs:
+                        self._restore_blocks_paged(devs, blks)
+                else:
+                    cache = self._fresh_cache(req)
+                    for b in range(nrec):
+                        stored = self.host.get(rid, b)
+                        if stored is not None:
+                            cache = self._restore_block(cache, b, stored)
+                    self.caches[rid] = cache
         self.sched.events.clear()
 
     # ------------------------------------------------------------------ step
@@ -236,18 +379,26 @@ class RealEngine:
                 self._key, sk = jax.random.split(self._key)
                 tokens[rid] = int(sample(logits[:, -1, :], self.sampling, sk)[0])
                 continue
-            if rid not in self.caches:
-                self.caches[rid] = self._fresh_cache(r)
             toks = self._tokens_of(r)[chunk.offset : chunk.offset + chunk.length]
-            img = getattr(r, "image_embeds", None)
-            img = img if (img is not None and chunk.offset == 0) else None
-            logits, cache = self._prefill_jit(
-                jnp.asarray(toks)[None, :],
-                self.caches[rid],
-                jnp.array([chunk.offset], jnp.int32),
-                None if img is None else jnp.asarray(img)[None],
-            )
-            self.caches[rid] = cache
+            if self.paged:
+                logits, self.pools = self._prefill_jit(
+                    jnp.asarray(toks)[None, :],
+                    self.pools,
+                    jnp.asarray(self._block_table(rid))[None, :],
+                    jnp.array([chunk.offset], jnp.int32),
+                )
+            else:
+                if rid not in self.caches:
+                    self.caches[rid] = self._fresh_cache(r)
+                img = getattr(r, "image_embeds", None)
+                img = img if (img is not None and chunk.offset == 0) else None
+                logits, cache = self._prefill_jit(
+                    jnp.asarray(toks)[None, :],
+                    self.caches[rid],
+                    jnp.array([chunk.offset], jnp.int32),
+                    None if img is None else jnp.asarray(img)[None],
+                )
+                self.caches[rid] = cache
             if chunk.offset + chunk.length == r.kv_target and r.num_generated == 0:
                 self._key, sk = jax.random.split(self._key)
                 tokens[rid] = int(sample(logits, self.sampling, sk)[0])
@@ -255,49 +406,124 @@ class RealEngine:
         # ---- decode batch ---------------------------------------------------
         if plan.decode_reqs:
             reqs = plan.decode_reqs
-            stacked = jax.tree.map(
-                lambda *xs: jnp.concatenate(xs, axis=1),
-                *[self.caches[r.request_id] for r in reqs],
-            )
-            last = jnp.asarray(
-                [self._tokens_of(r)[-1] for r in reqs], jnp.int32
-            )
-            lens = jnp.asarray([r.total_len - 1 for r in reqs], jnp.int32)
-
-            if (
+            use_safepoints = (
                 plan.pure_offline
                 and self.ec.enable_safepoints
                 and sched.sc.preempt_running
-            ):
-                logits, stacked, aborted = self._segmented_decode(
-                    stacked, last, lens
-                )
+            )
+            if self.paged:
+                logits, aborted = self._decode_paged(reqs, use_safepoints)
             else:
-                logits, stacked = self._decode_jit(last, stacked, lens)
+                logits, aborted = self._decode_contiguous(reqs, use_safepoints)
             if not aborted:
                 self._key, sk = jax.random.split(self._key)
                 toks = sample(logits, self.sampling, sk)
                 for i, r in enumerate(reqs):
                     tokens[r.request_id] = int(toks[i])
-                    self.caches[r.request_id] = jax.tree.map(
-                        lambda x, i=i: x[:, i : i + 1], stacked
-                    )
 
         sched.commit(plan, self._clock(), aborted=aborted, tokens=tokens)
-        for r in list(self.caches):
-            if not self.blocks.has_seq(r):
-                self.caches.pop(r, None)
+        if not self.paged:
+            for r in list(self.caches):
+                if not self.blocks.has_seq(r):
+                    self.caches.pop(r, None)
+        for sid in self.host.seq_ids():
+            if not self.blocks.has_seq(sid):
+                self.host.drop_seq(sid)
 
         if not aborted:
             executed_offline = [
                 r for r in plan.decode_reqs if not r.is_online
             ] + [c.request for c in plan.prefill_chunks if not c.request.is_online]
             self.ckpt.mark(executed_offline)
-            for seq_id, idx, _dev, _host in self.ckpt.plan(io_budget_blocks=1 << 30):
-                cache = self.caches.get(seq_id)
-                if cache is not None:
-                    self.host_store[(seq_id, idx)] = self._extract_block(cache, idx)
+            chosen = self.ckpt.plan(io_budget_blocks=1 << 30)
+            if self.paged:
+                if chosen:
+                    stored = self._extract_blocks_paged([c[2] for c in chosen])
+                    for (seq_id, idx, _dev, _host), blk in zip(chosen, stored):
+                        self.host.put(seq_id, idx, blk)
+            else:
+                for seq_id, idx, _dev, _host in chosen:
+                    cache = self.caches.get(seq_id)
+                    if cache is not None:
+                        self.host.put(seq_id, idx, self._extract_block(cache, idx))
         return True
+
+    # ---------------------------------------------------------------- decode
+    def _decode_paged(self, reqs: List[Request], use_safepoints: bool):
+        """Batched decode on the shared pool at a bucketed shape."""
+        bsz = len(reqs)
+        bp = self._decode_bucket(bsz)
+        tables = np.full(
+            (bp, self._table_width), self._scratch_block, np.int32
+        )
+        last = np.zeros((bp,), np.int32)
+        lens = np.zeros((bp,), np.int32)
+        for i, r in enumerate(reqs):
+            tables[i] = self._block_table(r.request_id)
+            last[i] = self._tokens_of(r)[-1]
+            lens[i] = r.total_len - 1
+        last_j, tables_j, lens_j = (
+            jnp.asarray(last), jnp.asarray(tables), jnp.asarray(lens)
+        )
+        if use_safepoints:
+            logits, aborted = self._segmented_decode_paged(
+                last_j, tables_j, lens_j
+            )
+            if aborted:
+                return None, True
+        else:
+            logits, self.pools = self._decode_jit(
+                last_j, self.pools, tables_j, lens_j
+            )
+        return logits[:bsz], False
+
+    def _segmented_decode_paged(self, last, tables, positions_1d):
+        """Safepoint-instrumented paged decode: one jitted dispatch per
+        K-layer segment, flag check between dispatches (§4.3).  Pool writes
+        of an aborted attempt sit at the uncommitted position and are
+        overwritten verbatim on re-execution."""
+        x = tf.embed(self.cfg, self.params, last[:, None])
+        positions = positions_1d[:, None]
+        state = {"x": x}
+        nseg = tf.num_segments(self.cfg)
+
+        def make_seg(i):
+            def run():
+                state["x"], self.pools = self._segment_jit(
+                    i, state["x"], self.pools, tables, positions
+                )
+
+            return run
+
+        completed, _done = self.safepoints.run(
+            [make_seg(i) for i in range(nseg)],
+            preemptible=True,
+            on_safepoint=None,
+        )
+        if not completed:
+            self.flag.clear()
+            return None, True
+        logits = tf.lm_head(self.cfg, self.params, state["x"])[:, 0, :]
+        return logits, False
+
+    def _decode_contiguous(self, reqs: List[Request], use_safepoints: bool):
+        stacked = jax.tree.map(
+            lambda *xs: jnp.concatenate(xs, axis=1),
+            *[self.caches[r.request_id] for r in reqs],
+        )
+        last = jnp.asarray([self._tokens_of(r)[-1] for r in reqs], jnp.int32)
+        lens = jnp.asarray([r.total_len - 1 for r in reqs], jnp.int32)
+        if use_safepoints:
+            logits, stacked, aborted = self._segmented_decode(stacked, last, lens)
+            if aborted:
+                return None, True
+        else:
+            logits, stacked = self._decode_jit(last, stacked, lens)
+        for i, r in enumerate(reqs):
+            self.caches[r.request_id] = jax.tree.map(
+                lambda x, i=i: x[:, i : i + 1], stacked
+            )
+        return logits, False
 
     def _segmented_decode(self, stacked, last, lens):
         """Safepoint-instrumented decode: one jitted dispatch per K-layer

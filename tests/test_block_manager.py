@@ -1,6 +1,6 @@
 """Block manager: unit tests + hypothesis property tests on the invariants."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.kvcache.block_manager import BlockManager, OutOfBlocks
 

@@ -10,7 +10,7 @@ import os
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 os.environ.setdefault("REPRO_KERNEL_BACKEND", "interpret")
 

@@ -1,0 +1,223 @@
+"""Paged execution backend (shared block pool + block-table attention):
+
+ * backend capability matrix (paged for plain causal KV, fallback otherwise)
+ * pool-ops roundtrips (chunked scatter, per-block extract/restore)
+ * token parity: paged engine vs contiguous engine, uninterrupted
+ * token identity on the paged pool under forced preemption + IC restore,
+   and under blocking swap-out preemption
+ * decode jit recompilation bounded by the batch-bucket count
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.request import Priority, Request
+from repro.core.scheduler import SchedulerConfig
+from repro.kvcache import cache_ops
+from repro.models import transformer as tf
+from repro.serving.real_engine import RealEngine, RealEngineConfig
+
+CFG = get_config("llama-2-7b").reduced()
+PARAMS = tf.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def mkreq(prio, plen, gen, seed):
+    prompt = (
+        np.random.default_rng(seed)
+        .integers(0, CFG.vocab_size, plen)
+        .astype(np.int32)
+    )
+    return Request(prio, prompt_len=plen, max_new_tokens=gen, prompt=prompt)
+
+
+def _run(backend, gens=(24, 24, 24), eng_kw=None, sched=None, disturb=False):
+    eng = RealEngine(
+        CFG, PARAMS,
+        sched_cfg=sched,
+        eng_cfg=RealEngineConfig(backend=backend, **(eng_kw or {})),
+    )
+    reqs = [mkreq(Priority.OFFLINE, 40, g, s) for s, g in enumerate(gens)]
+    for r in reqs:
+        eng.submit(r)
+    if disturb:
+        for _ in range(8):
+            eng.step()
+        for s in range(2):
+            eng.on_online_arrival(mkreq(Priority.ONLINE, 60, 8, 100 + s))
+    eng.run()
+    return eng, [r.output_tokens for r in reqs], reqs
+
+
+# --------------------------------------------------------------- capability
+
+
+def test_backend_capability_matrix():
+    assert tf.supports_paged(get_config("llama-2-7b").reduced())
+    assert tf.supports_paged(get_config("olmoe-1b-7b").reduced())
+    assert not tf.supports_paged(get_config("mamba2-1.3b").reduced())
+    assert not tf.supports_paged(get_config("mixtral-8x22b").reduced())  # SWA
+    assert not tf.supports_paged(get_config("llama-3.2-vision-11b").reduced())
+    assert not tf.supports_paged(get_config("hubert-xlarge").reduced())
+
+
+def test_forcing_paged_on_unsupported_arch_raises():
+    cfg = get_config("mamba2-1.3b").reduced()
+    params = tf.init_params(cfg, jax.random.PRNGKey(1))
+    with pytest.raises(ValueError):
+        RealEngine(cfg, params, eng_cfg=RealEngineConfig(backend="paged"))
+
+
+def test_fallback_engine_has_no_pools():
+    cfg = get_config("mamba2-1.3b").reduced()
+    params = tf.init_params(cfg, jax.random.PRNGKey(1))
+    eng = RealEngine(cfg, params)
+    assert not eng.paged and not hasattr(eng, "pools")
+
+
+# ----------------------------------------------------------------- pool ops
+
+
+def test_write_paged_chunk_matches_append_order():
+    """Multi-token scatter lands tokens exactly where one-at-a-time appends
+    would."""
+    key = jax.random.PRNGKey(2)
+    bs, nblk, hkv, d = 4, 8, 2, 16
+    k_pool = jnp.zeros((nblk, bs, hkv, d))
+    v_pool = jnp.zeros((nblk, bs, hkv, d))
+    tables = jnp.array([[5, 2, 7, -1], [1, 6, -1, -1]], jnp.int32)
+    k_new = jax.random.normal(key, (2, 6, hkv, d))
+    v_new = jax.random.normal(jax.random.fold_in(key, 1), (2, 6, hkv, d))
+    offsets = jnp.array([3, 0], jnp.int32)  # seq0 appends at 3.., seq1 at 0..
+    positions = offsets[:, None] + jnp.arange(6)[None, :]
+    kc, vc = cache_ops.write_paged_chunk(
+        k_pool, v_pool, k_new, v_new, tables, positions
+    )
+    ka, va = k_pool, v_pool
+    for t in range(6):
+        ka, va = cache_ops.append_paged(
+            ka, va, k_new[:, t], v_new[:, t], tables, offsets + t
+        )
+    assert jnp.array_equal(kc, ka) and jnp.array_equal(vc, va)
+
+
+def test_scatter_drops_writes_through_padding():
+    """Writes addressed through -1 table entries (or beyond the table) must
+    be dropped, never aliased onto a real block."""
+    k_pool = jnp.zeros((4, 2, 1, 4))
+    v_pool = jnp.zeros((4, 2, 1, 4))
+    tables = jnp.array([[2, -1]], jnp.int32)
+    ones = jnp.ones((1, 1, 1, 4))
+    # token at position 3 -> padded column 1 -> dropped
+    kc, vc = cache_ops.write_paged_chunk(
+        k_pool, v_pool, ones, ones, tables, jnp.array([[3]], jnp.int32)
+    )
+    assert float(jnp.max(jnp.abs(kc))) == 0.0
+    # decode append through a -1 column likewise drops
+    ka, va = cache_ops.append_paged(
+        k_pool, v_pool, ones[:, 0], ones[:, 0], tables,
+        jnp.array([2], jnp.int32),
+    )
+    assert float(jnp.max(jnp.abs(ka))) == 0.0
+    # position 5 is beyond the 2-wide table entirely -> dropped
+    kc, _ = cache_ops.write_paged_chunk(
+        k_pool, v_pool, ones, ones, tables, jnp.array([[5]], jnp.int32)
+    )
+    assert float(jnp.max(jnp.abs(kc))) == 0.0
+
+
+def test_max_model_len_not_multiple_of_block_size():
+    """Table width must cover ceil(max_model_len / block_size) blocks."""
+    _, ref, _ = _run("paged")
+    eng, out, _ = _run("paged", eng_kw=dict(max_model_len=100))
+    assert eng._table_width == 7  # ceil(100/16), not floor
+    assert out == ref
+
+
+def test_extract_write_block_roundtrip():
+    pool = jax.random.normal(jax.random.PRNGKey(3), (8, 4, 2, 16))
+    blk = cache_ops.extract_block(pool, 5)
+    wiped = cache_ops.write_block(pool, 5, jnp.zeros_like(blk))
+    assert float(jnp.max(jnp.abs(wiped[5]))) == 0.0
+    restored = cache_ops.write_block(wiped, 5, blk)
+    assert jnp.array_equal(restored, pool)
+
+
+def test_paged_attention_ref_softcap():
+    """Pallas kernel (interpret) matches the oracle with logit softcapping."""
+    from repro.kernels.paged_attention import paged_attention
+
+    key = jax.random.PRNGKey(4)
+    q = jax.random.normal(key, (2, 4, 32))
+    kp = jax.random.normal(jax.random.fold_in(key, 1), (8, 8, 2, 32))
+    vp = jax.random.normal(jax.random.fold_in(key, 2), (8, 8, 2, 32))
+    tables = jnp.array([[0, 3, 6], [1, 4, -1]], jnp.int32)
+    lens = jnp.array([20, 11], jnp.int32)
+    out = paged_attention(
+        q, kp, vp, tables, lens, logit_softcap=30.0, interpret=True
+    )
+    want = cache_ops.paged_attention_ref(
+        q, kp, vp, tables, lens, logit_softcap=30.0
+    )
+    assert float(jnp.max(jnp.abs(out - want))) < 2e-5
+
+
+# ------------------------------------------------------------ engine parity
+
+
+def test_paged_matches_contiguous_uninterrupted():
+    _, out_paged, _ = _run("paged")
+    _, out_contig, _ = _run("contiguous")
+    assert out_paged == out_contig
+
+
+def test_paged_token_identity_under_forced_preemption():
+    """The acceptance property: forced preemption + incremental-checkpoint
+    restore on the shared pool emits byte-identical greedy tokens."""
+    eng0, ref, _ = _run("paged")
+    eng, out, reqs = _run(
+        "paged",
+        eng_kw=dict(num_device_blocks=14, max_model_len=256),
+        disturb=True,
+    )
+    assert sum(r.num_preemptions for r in reqs) > 0, "scenario must preempt"
+    assert out == ref
+    assert eng.ckpt.stats.blocks_checkpointed > 0
+    # preempted pool state restored via O(block) physical copies, never a
+    # per-request cache dict
+    assert not hasattr(eng, "caches")
+
+
+def test_paged_token_identity_under_swap_preemption():
+    """Blocking swap-out preemption (PREEMPTSCHEDULING ablation) moves whole
+    physical blocks — including the partial tail — through the host store."""
+    _, ref, _ = _run("paged")
+    sched = SchedulerConfig(
+        chunk_size=32, slo_aware=False, offline_batch_tokens=4096,
+        swap_on_preempt=True,
+    )
+    eng, out, reqs = _run(
+        "paged",
+        eng_kw=dict(num_device_blocks=14, max_model_len=256,
+                    enable_checkpointing=False),
+        sched=sched,
+        disturb=True,
+    )
+    assert sum(r.num_preemptions for r in reqs) > 0, "scenario must preempt"
+    assert out == ref
+
+
+# -------------------------------------------------------- bounded recompiles
+
+
+def test_decode_recompiles_bounded_by_buckets():
+    """Batch sizes 5,4,3,2,1 appear as requests drain; bucketed padding must
+    trace at most the 4 distinct buckets {8,4,2,1}, not all 5 sizes."""
+    gens = (4, 6, 8, 10, 12)
+    eng, outs, _ = _run(
+        "paged", gens=gens, eng_kw=dict(enable_safepoints=False)
+    )
+    assert [len(o) for o in outs] == list(gens)
+    buckets = {RealEngine._decode_bucket(n) for n in range(1, len(gens) + 1)}
+    assert 0 < eng.decode_trace_count <= len(buckets) < len(gens)

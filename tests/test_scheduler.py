@@ -1,7 +1,7 @@
 """Unified scheduler: Algorithm 1 admission/preemption semantics, Algorithm 2
 urgent path, budget arithmetic, and hypothesis properties."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.configs import get_config
 from repro.core.budget import calc_budget, max_tokens_within

@@ -14,7 +14,8 @@ from repro.launch.hlo_analysis import parse_hlo, rollup, trip_of
 
 
 def _abstract_mesh(shape, axes):
-    return jax.sharding.AbstractMesh(shape, axes)
+    # Installed JAX takes ((name, size), ...) pairs, not (shape, axes).
+    return jax.sharding.AbstractMesh(tuple(zip(axes, shape)))
 
 
 @pytest.mark.parametrize("arch", ["command-r-plus-104b", "mixtral-8x22b",
