@@ -2,7 +2,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test test-fast bench
+.PHONY: test test-fast bench bench-wallclock docs-check
 
 test:
 	python -m pytest -x -q
@@ -14,3 +14,11 @@ test-fast:
 
 bench:
 	python -m benchmarks.paged_decode_bench
+
+# real-execution co-serving on the wall clock (DESIGN.md §10)
+bench-wallclock:
+	python -m benchmarks.coserve_wallclock_bench
+
+# fails on broken `DESIGN.md §N` references and dead markdown links
+docs-check:
+	python tools/docs_check.py

@@ -1,6 +1,12 @@
 """Shared benchmark plumbing: the three systems under comparison and the
 paper's workloads, in simulated time with the A100 cost model (the paper's
-testbed) so figures are directly comparable to the published ones."""
+testbed) so figures are directly comparable to the published ones.
+
+``row(name, value, derived)`` formats the harness's CSV rows
+(``name,us_per_call,derived``) — all simulated suites emit through it.
+The real-execution wall-clock benchmark
+(``benchmarks.coserve_wallclock_bench``) builds its own RealEngine +
+CoServingRuntime stack instead and prints key=value lines."""
 from __future__ import annotations
 
 import numpy as np

@@ -1,0 +1,179 @@
+"""Wall-clock co-serving benchmark — the paper's §6 experiment on REAL
+execution (DESIGN.md §10).
+
+What it measures: replays a ``loadgen`` trace (ON/OFF phased bursts by
+default, or a gamma process) through ``CoServingRuntime`` driving
+``RealEngine``'s paged backend, after an on-device calibration pass
+(``RealEngine.calibrate``) fits the latency profile that ``calc_budget``
+schedules against.  A deterministic 3-arrival "burst probe" lands inside
+the initial offline prefill wave — the paper's burst-into-harvest moment —
+so the run always exercises Algorithm 2's mid-iteration abort path.
+
+SLOs default to multiples of *measured* single-iteration times
+(``--ttft-scale`` x one online chunk, ``--tpot-scale`` x one decode
+iteration), i.e. they are aggressive on purpose: the point is to watch the
+runtime preempt offline work at real safepoints to protect them.  Pass
+absolute ``--ttft``/``--tpot`` to override.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.coserve_wallclock_bench [--duration 3]
+
+Expected output format (key=value lines, wall-clock seconds/tokens):
+  calibrated model=<arch> ... t_chunk_ms=... t_decode_ms=...
+  slo ttft_ms=... tpot_ms=...
+  p99_ttft_ms=... p99_tpot_ms=... ttft_attainment=... tpot_attainment=...
+  throughput_tok_s=... online_tok_s=... offline_tok_s=...
+  preemptions=<evictions> safepoint_aborts=<Alg.2 mid-iteration aborts>
+  preemption_latency_ms=<mean flag->abort latency, - if none>
+On CPU this runs the reduced model through the jnp oracle kernels; on TPU
+the identical code path dispatches the Pallas kernels.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--arch", default="llama-2-7b")
+    ap.add_argument("--trace", choices=["onoff", "gamma"], default="onoff")
+    ap.add_argument("--duration", type=float, default=3.0)
+    ap.add_argument("--rate", type=float, default=6.0)
+    ap.add_argument("--cv", type=float, default=1.0)  # gamma trace only
+    ap.add_argument("--on", type=float, default=0.6)
+    ap.add_argument("--off", type=float, default=1.2)
+    ap.add_argument("--offline", type=int, default=10)
+    ap.add_argument("--online-prompt", type=int, default=24)
+    ap.add_argument("--online-new", type=int, default=6)
+    # prompts straddle the chunk size so every prefill wave spans several
+    # length buckets -> several dispatches -> several safepoint boundaries
+    ap.add_argument("--offline-prompt", type=int, default=40)
+    ap.add_argument("--offline-new", type=int, default=20)
+    ap.add_argument("--ttft", type=float, default=None, help="absolute SLO (s)")
+    ap.add_argument("--tpot", type=float, default=None)
+    ap.add_argument("--ttft-scale", type=float, default=1.5)
+    ap.add_argument("--tpot-scale", type=float, default=3.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.core.profiler import BatchShape
+    from repro.core.scheduler import SchedulerConfig
+    from repro.core.slo import SLO
+    from repro.models import transformer as tf
+    from repro.serving import loadgen
+    from repro.serving.real_engine import RealEngine, RealEngineConfig
+    from repro.serving.runtime import CoServingRuntime
+
+    cfg = get_config(args.arch).reduced(num_layers=4, safepoint_interval=1)
+    params = tf.init_params(cfg, jax.random.PRNGKey(args.seed))
+    sched_cfg = SchedulerConfig(
+        chunk_size=32, slo_aware=True, avg_ctx_estimate=64, max_batch_seqs=8
+    )
+    eng = RealEngine(
+        cfg,
+        params,
+        sched_cfg=sched_cfg,
+        # max_prefill_batch=4 splits an 8-chunk wave into >=2 dispatches, so
+        # every prefill wave exposes at least one safepoint boundary
+        eng_cfg=RealEngineConfig(
+            max_model_len=128, num_device_blocks=256, block_size=16,
+            max_prefill_batch=4,
+        ),
+    )
+
+    t0 = time.perf_counter()
+    prof = eng.calibrate()
+    t_chunk = prof.iter_time(
+        BatchShape(
+            prefill_tokens=32,
+            prefill_attn_tokens=32 * 16.0,
+            prefill_ctx_end=32,
+            num_seqs=1,
+        )
+    )
+    t_dec = prof.iter_time(
+        BatchShape(decode_tokens=8, decode_ctx=8 * 64, num_seqs=8)
+    )
+    print(
+        f"calibrated model={cfg.name} backend={jax.default_backend()} "
+        f"calibration_s={time.perf_counter() - t0:.1f} "
+        f"t_chunk_ms={t_chunk * 1e3:.1f} t_decode_ms={t_dec * 1e3:.1f}"
+    )
+
+    slo = SLO(
+        ttft=args.ttft if args.ttft is not None else args.ttft_scale * t_chunk,
+        tpot=args.tpot if args.tpot is not None else args.tpot_scale * t_dec,
+    )
+    eng.sched.slo = slo
+    print(f"slo ttft_ms={slo.ttft * 1e3:.0f} tpot_ms={slo.tpot * 1e3:.0f}")
+
+    # ---- trace ------------------------------------------------------------
+    offline = loadgen.make_offline_batch(
+        args.offline,
+        loadgen.LengthSpec(args.offline_prompt, args.offline_new, 0.5, 0.3),
+        np.random.default_rng(args.seed + 1),
+    )
+    if args.trace == "onoff":
+        times = loadgen.onoff_arrivals(
+            args.rate, args.on, args.off, args.duration,
+            np.random.default_rng(args.seed + 2),
+        )
+        times = [t + 0.4 for t in times]
+    else:
+        times = loadgen.gamma_arrivals(
+            args.rate, args.cv, args.duration,
+            np.random.default_rng(args.seed + 2), start=0.4,
+        )
+    # deterministic burst probe into the initial offline prefill wave (the
+    # first dispatch boundary is its earliest possible delivery point)
+    times = [0.02, 0.03, 0.04] + times
+    online = loadgen.make_online_requests(
+        times,
+        loadgen.LengthSpec(args.online_prompt, args.online_new, 0.2, 0.2),
+        np.random.default_rng(args.seed + 3),
+    )
+    loadgen.attach_prompts(
+        online + offline, cfg.vocab_size, np.random.default_rng(args.seed + 4)
+    )
+
+    # ---- replay -----------------------------------------------------------
+    rt = CoServingRuntime(eng)
+    m = rt.replay(online + offline)
+
+    print(
+        f"p99_ttft_ms={m.p99_ttft * 1e3:.0f} p99_tpot_ms={m.p99_tpot * 1e3:.0f} "
+        f"ttft_attainment={m.ttft_slo_attainment:.2f} "
+        f"tpot_attainment={m.tpot_slo_attainment:.2f}"
+    )
+    print(
+        f"throughput_tok_s={m.throughput_tokens_per_s:.0f} "
+        f"online_tok_s={m.online_throughput:.0f} "
+        f"offline_tok_s={m.offline_throughput:.0f} "
+        f"finished={m.num_finished}/{len(online) + len(offline)} "
+        f"duration_s={rt.duration:.1f}"
+    )
+    lat = rt.stats.preemption_latencies
+    print(
+        f"preemptions={m.num_preemptions} "
+        f"safepoint_aborts={rt.stats.safepoint_aborts} "
+        f"preemption_latency_ms="
+        f"{np.mean(lat) * 1e3:.0f}" if lat else
+        f"preemptions={m.num_preemptions} "
+        f"safepoint_aborts={rt.stats.safepoint_aborts} "
+        f"preemption_latency_ms=-"
+    )
+    if rt.stats.safepoint_aborts == 0:
+        print(
+            "warning: no safepoint abort observed — SLO too loose for this "
+            "substrate? (try --ttft-scale 1.0 or a denser --rate)"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,9 +1,14 @@
 """Fig. 5 — overall serving performance on the bursty real-world trace.
 
-Online-Only vs vLLM++ vs ConServe on the BurstGPT-like 15-minute window.
+Online-Only vs vLLM++ vs ConServe on the BurstGPT-like 15-minute window,
+in simulated time on the A100 cost model (``SimEngine``).
 Paper claims: ConServe ~2.35x total throughput vs Online-Only at comparable
 latency; ~84x lower P99 TTFT than vLLM++ (98.8% reduction); ~86% of the
-throughput of the latency-oblivious vLLM++."""
+throughput of the latency-oblivious vLLM++.
+
+Usage: PYTHONPATH=src python -m benchmarks.run --only fig5 [--quick]
+Output: ``fig5_<system>_p99_ttft_ms`` CSV rows (value in the us_per_call
+column; tpot/throughput/attainment in the derived column)."""
 from __future__ import annotations
 
 import time

@@ -1,8 +1,13 @@
 """Fig. 6 — ON/OFF phased load: max-capacity ON phases, silent OFF phases.
 
+Simulated time on the A100 cost model (``SimEngine``).
 Paper claims: ConServe keeps P99 TTFT/TPOT under SLO during ON phases,
 harvests OFF phases at high offline throughput (5868 tok/s on A100/7B), and
-scales offline serving down within milliseconds when the ON phase returns."""
+scales offline serving down within milliseconds when the ON phase returns.
+
+Usage: PYTHONPATH=src python -m benchmarks.run --only fig6 [--quick]
+Output: ``fig6_*`` CSV rows (latency / phase-throughput metrics in the
+us_per_call column, detail in the derived column)."""
 from __future__ import annotations
 
 import numpy as np

@@ -1,8 +1,12 @@
 """Fig. 7 — robustness to load burstiness (CV sweep) and request rate sweep.
 
+Simulated time on the A100 cost model (``SimEngine``).
 Paper claims: ConServe TTFT stays within ~25% of Online-Only across CVs and
 rates; vLLM++ suffers multi-second TTFTs; ConServe offline throughput still
-beats vLLM++ by 4-12% (I/O stalls eliminated by IC + background prefetch)."""
+beats vLLM++ by 4-12% (I/O stalls eliminated by IC + background prefetch).
+
+Usage: PYTHONPATH=src python -m benchmarks.run --only fig7 [--quick]
+Output: ``fig7_<system>_cv<..>`` / ``..._rate<..>`` CSV rows."""
 from __future__ import annotations
 
 import numpy as np

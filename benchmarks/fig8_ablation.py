@@ -1,8 +1,12 @@
 """Fig. 8 — ablation: each ConServe optimization enabled incrementally.
 
 vLLM++ -> +preemptive SLO-aware scheduler -> +incremental checkpointing ->
-+background prefetch.  Paper: the scheduler first CUTS P99 TTFT by ~71% at
-an offline-throughput cost; IC recovers ~14% and prefetch ~13.6% of it."""
++background prefetch, in simulated time on the A100 cost model
+(``SimEngine``).  Paper: the scheduler first CUTS P99 TTFT by ~71% at an
+offline-throughput cost; IC recovers ~14% and prefetch ~13.6% of it.
+
+Usage: PYTHONPATH=src python -m benchmarks.run --only fig8 [--quick]
+Output: ``fig8_<stage>_*`` CSV rows, one per ablation stage."""
 from __future__ import annotations
 
 import numpy as np

@@ -8,6 +8,10 @@ point; the TPU path runs identical code with Pallas kernels):
     shapes vs per-size contiguous shapes,
   * preempt->resume cost on the paged pool (pure table edits + O(block)
     restores) vs the contiguous extract/slice path.
+
+Usage: PYTHONPATH=src python -m benchmarks.paged_decode_bench
+Output: ``paged_*``/``contig_*`` CSV rows (``name,us_per_call,derived``),
+including ``*_retraces`` counts from ``decode_trace_count``.
 """
 from __future__ import annotations
 

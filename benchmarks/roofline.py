@@ -1,8 +1,12 @@
-"""§Roofline — aggregate the dry-run artifacts into the per-(arch × shape)
+"""Roofline — aggregate the dry-run artifacts into the per-(arch × shape)
 roofline table (terms in seconds, dominant bottleneck, MODEL_FLOPS ratio).
 
 Reads experiments/dryrun/*.json produced by ``repro.launch.dryrun``; does
-NOT recompile (run the dry-run first: see README)."""
+NOT recompile (run the dry-run first).
+
+Usage: PYTHONPATH=src python -m benchmarks.run --only roofline
+Output: ``roofline_<arch>_<shape>`` CSV rows (t_total us; bottleneck and
+term breakdown in the derived column); empty if no dry-run artifacts."""
 from __future__ import annotations
 
 import glob

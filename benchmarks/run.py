@@ -1,15 +1,21 @@
-# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
-"""Benchmark harness entry point.
+"""Benchmark harness entry point: the SIMULATED-TIME suites, one per paper
+artifact (DESIGN.md §8).
 
-  PYTHONPATH=src python -m benchmarks.run [--quick]
+Usage:
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only SUITE]...
 
-Suites (one per paper artifact — see DESIGN.md §8):
+Suites:
   fig5  — overall bursty-trace co-serving (Online-Only / vLLM++ / ConServe)
   fig6  — ON/OFF phased load
   fig7  — CV + request-rate sweeps
   fig8  — optimization ablation stack
-  safepoint — §6.4.2 preemptible-worker overhead (real execution)
-  roofline  — §Roofline terms from the multi-pod dry-run artifacts
+  safepoint — paper §6.4.2 preemptible-worker overhead (real execution)
+  roofline  — roofline terms from the multi-pod dry-run artifacts
+
+Expected output format: one CSV header ``name,us_per_call,derived`` then
+one row per measurement; per-suite wall time goes to stderr.  The
+real-execution wall-clock experiment is separate:
+``python -m benchmarks.coserve_wallclock_bench`` (DESIGN.md §10).
 """
 from __future__ import annotations
 

@@ -1,19 +1,18 @@
-"""Offline Batch-API serving with the paper's offline profiler (§4.5):
+"""Offline Batch-API serving with the on-device calibration pass (paper
+§4.5; DESIGN.md §10):
 
-1. profile the engine's step latency over a grid of batch shapes
-   (``run_offline_profiling``), fit the linear model, save it;
-2. serve an offline summarization pool with the measured profile driving
-   the SLO-aware budget.
+1. ``RealEngine.calibrate()`` times the engine's own jitted paged
+   prefill/decode entry points across the chunk sizes and power-of-two
+   decode buckets serving actually traces, and fits the measured profile;
+2. an offline summarization pool is then served with that profile driving
+   the SLO-aware token budget (``calc_budget``).
 
   PYTHONPATH=src python examples/offline_batch_profiled.py
 """
-import time
-
 import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.profiler import BatchShape, run_offline_profiling
 from repro.core.scheduler import SchedulerConfig
 from repro.core.slo import SLO
 from repro.models import transformer as tf
@@ -23,38 +22,23 @@ from repro.serving.real_engine import RealEngine
 cfg = get_config("gemma-7b").reduced()
 params = tf.init_params(cfg, jax.random.PRNGKey(0))
 
-# --- offline profiling phase (paper §4.5) --------------------------------
-# the probe drives the same paged prefill path the serving engine executes,
-# so the calibrated cost model matches the layout actually served
-probe = RealEngine(cfg, params)
-assert probe.paged
-
-
-def measure(shape: BatchShape) -> float:
-    """Execute a paged prefill of the given token count and time it."""
-    toks = np.zeros((1, max(1, shape.prefill_tokens)), np.int32)
-    tables = np.arange(probe._table_width, dtype=np.int32)[None]
-    t0 = time.perf_counter()
-    logits, probe.pools = probe._prefill_jit(
-        toks, probe.pools, tables, np.zeros(1, np.int32)
-    )
-    logits.block_until_ready()
-    return time.perf_counter() - t0
-
-
-prof = run_offline_profiling(measure, prefill_grid=[8, 32, 64],
-                             decode_grid=[1, 2], ctx_grid=[32])
-print("profiled iteration model:",
-      [f"{c:.2e}" for c in (prof._coef if prof._coef is not None else [])])
-
-# --- serving phase with the measured profile ------------------------------
 engine = RealEngine(
     cfg, params,
     sched_cfg=SchedulerConfig(chunk_size=32, slo_aware=True,
                               offline_batch_tokens=2048),
     slo=SLO(ttft=5.0, tpot=1.0),
 )
-engine.sched.model = prof  # SLO budget now derives from measurements
+assert engine.paged
+
+# --- calibration phase (paper §4.5) ---------------------------------------
+# measured on the same paged entry points the serving loop dispatches, so
+# the cost model matches the layout actually served (and the jit cache is
+# warm before the first request arrives)
+prof = engine.calibrate()
+print("calibrated iteration model:",
+      [f"{c:.2e}" for c in (prof._coef if prof._coef is not None else [])])
+
+# --- serving phase with the measured profile ------------------------------
 fe = Frontend(engine)
 rng = np.random.default_rng(0)
 job = fe.submit_batch(

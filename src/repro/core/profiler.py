@@ -1,14 +1,20 @@
 """Latency models: the paper's offline profiler + an analytical roofline model.
 
 ConServe's SLO-aware scheduler needs ``iter_time(batch composition)`` and
-``swap_time(bytes)`` estimates (§4.5).  Two interchangeable backends:
+``swap_time(bytes)`` estimates (paper §4.5).  Two interchangeable backends:
 
 * ``AnalyticalCostModel`` — roofline terms from hardware constants and the
   model config.  Drives the simulated-time benchmarks (CPU container can't
   measure TPU wall time) and provides the cost surface for ``calc_budget``.
 * ``MeasuredProfiler``   — the paper's approach: run a grid of batch shapes
-  offline, fit a linear model, save/load locally.  Used by the real-exec
-  integration tests (measuring actual CPU step times of tiny models).
+  offline, fit a linear model, save/load locally.
+
+The wall-clock runtime obtains a ``MeasuredProfiler`` from an *on-device
+calibration pass* (DESIGN.md §10): ``CalibrationGrid`` + ``calibrate``
+time the engine's actual jitted prefill/decode entry points across the
+chunk sizes and power-of-two decode buckets it really traces, so
+``calc_budget`` token budgets reflect the machine being served
+(``RealEngine.calibrate`` wires this up).
 """
 from __future__ import annotations
 
@@ -275,6 +281,66 @@ class MeasuredProfiler:
         prof.swap_samples = [tuple(x) for x in data["swap_samples"]]
         prof.fit()
         return prof
+
+
+@dataclass(frozen=True)
+class CalibrationGrid:
+    """Shapes the on-device calibration pass measures (DESIGN.md §10).
+
+    The grid mirrors what the real engine actually executes: prefill chunks
+    at the scheduler's chunk sizes, decode batches at the power-of-two
+    bucket sizes the jit cache is keyed on, each at a few context depths.
+    Timing every (bucket, chunk) the engine can trace also pre-compiles
+    those programs, so calibration doubles as a jit warm-up pass.
+    """
+
+    chunk_sizes: Tuple[int, ...] = (16, 32, 64)
+    prefill_batches: Tuple[int, ...] = (1,)  # batched-prefill group sizes
+    decode_buckets: Tuple[int, ...] = (1, 2, 4, 8)
+    ctx_fractions: Tuple[float, ...] = (0.25, 0.75)  # of max context
+    repeats: int = 3  # timed runs per shape (min is taken)
+    warmup: int = 1  # untimed runs per shape (absorbs compilation)
+    # checkpoint-extract timing; power-of-two counts double as warm-up of
+    # the bucketed extract gather (RealEngine pads id lists to these)
+    swap_block_counts: Tuple[int, ...] = (1, 2, 4, 8)
+
+
+def calibrate(
+    prefill_timer: Callable[[int, int], float],
+    decode_timer: Callable[[int, int], float],
+    max_ctx: int,
+    grid: CalibrationGrid = CalibrationGrid(),
+    swap_timer: Optional[Callable[[int], Tuple[int, float]]] = None,
+) -> MeasuredProfiler:
+    """Fit a ``MeasuredProfiler`` from on-device measurements.
+
+    ``prefill_timer(batch, chunk)`` and ``decode_timer(batch, ctx)`` return
+    wall seconds for one iteration at that shape; ``swap_timer(n_blocks)``
+    returns ``(bytes_moved, seconds)`` for a device→host checkpoint copy.
+    The executor callables are supplied by the engine (``RealEngine.
+    calibrate``) so this module stays free of serving-layer imports.
+    """
+    prof = MeasuredProfiler()
+    for b in grid.prefill_batches:
+        for c in grid.chunk_sizes:
+            c = min(c, max_ctx)
+            shape = BatchShape(
+                prefill_tokens=b * c,
+                prefill_attn_tokens=b * c * c / 2.0,
+                prefill_ctx_end=b * c,
+                num_seqs=b,
+            )
+            prof.record(shape, prefill_timer(b, c))
+    for b in grid.decode_buckets:
+        for f in grid.ctx_fractions:
+            ctx = max(1, min(int(f * max_ctx), max_ctx - 1))
+            shape = BatchShape(decode_tokens=b, decode_ctx=b * ctx, num_seqs=b)
+            prof.record(shape, decode_timer(b, ctx))
+    if swap_timer is not None:
+        for n in grid.swap_block_counts:
+            prof.record_swap(*swap_timer(n))
+    prof.fit()
+    return prof
 
 
 def run_offline_profiling(

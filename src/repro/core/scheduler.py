@@ -14,7 +14,10 @@ One scheduler serves both priority classes:
 
 The scheduler owns request state + the block manager; it does not touch
 device memory — it returns an ``IterationPlan`` that the engine executes
-(really, or in simulated time) and then ``commit``s back.
+(really, or in simulated time) and then ``commit``s back.  It is also the
+admission-control point: ``submit`` rejects requests that can never fit
+``max_model_len`` with a typed ``AdmissionError`` before any queueing or
+block allocation (DESIGN.md §9).
 """
 from __future__ import annotations
 
@@ -35,6 +38,19 @@ from .request import Phase, Priority, Request
 from .slo import SLO
 
 # ---------------------------------------------------------------------------
+
+
+class AdmissionError(ValueError):
+    """Request rejected at admission time, before any device state exists.
+
+    Raised by ``UnifiedScheduler.submit`` (and therefore by the engine/API
+    submission paths) when a request can never fit the serving configuration
+    — e.g. ``prompt_len + max_new_tokens`` exceeds ``max_model_len``.  The
+    contract is that admission rejection happens *before* the request enters
+    any queue and before a single KV block is allocated, so callers can
+    surface a typed error to the client instead of a mid-run failure from
+    the execution backend.
+    """
 
 
 @dataclass
@@ -73,6 +89,10 @@ class SchedulerConfig:
     slo_aware: bool = True  # False -> vLLM++-style: ignore budget, pack max
     preempt_running: bool = True  # Algorithm 2 urgent preemption
     swap_on_preempt: bool = False  # PREEMPTSCHEDULING: swap instead of discard
+    # Admission control: requests with prompt_len + max_new_tokens beyond
+    # this are rejected with AdmissionError at submit() time (None = no cap;
+    # the real engine sets it to its KV capacity, RealEngineConfig.max_model_len).
+    max_model_len: Optional[int] = None
 
 
 class UnifiedScheduler:
@@ -109,7 +129,23 @@ class UnifiedScheduler:
         self.io_gate: Optional[Callable[[], bool]] = None
 
     # ------------------------------------------------------------ submission
+    def check_admission(self, req: Request) -> None:
+        """Validate a request against the serving configuration.
+
+        Pure read — safe to call from any thread (the wall-clock runtime's
+        API ingress validates synchronously, before queuing the request for
+        the engine thread).  Raises ``AdmissionError``; allocates nothing.
+        """
+        cap = self.sc.max_model_len
+        if cap is not None and req.target_len > cap:
+            raise AdmissionError(
+                f"request {req.request_id}: prompt_len ({req.prompt_len}) + "
+                f"max_new_tokens ({req.max_new_tokens}) = {req.target_len} "
+                f"exceeds max_model_len ({cap})"
+            )
+
     def submit(self, req: Request) -> None:
+        self.check_admission(req)
         (self.online_q if req.is_online else self.offline_q).append(req)
 
     @property
@@ -270,6 +306,11 @@ class UnifiedScheduler:
                 avg_ctx=self.sc.avg_ctx_estimate,
                 max_seqs=self.sc.max_batch_seqs,
                 headroom=self.sc.budget_headroom,
+                # floor: one chunk must always fit, or huge online prompts
+                # starve — but on slow substrates (measured CPU profiles) a
+                # large fixed floor would swamp the SLO bound, so tie it to
+                # the configured chunk rather than a hardware-era constant
+                min_tokens=self.sc.chunk_size,
             )
         else:  # vLLM++ ablation: priority order but throughput-greedy budget
             budget = TokenBudget(
@@ -510,7 +551,20 @@ class UnifiedScheduler:
         if plan is None or plan.empty or not plan.pure_offline:
             return False  # co-serving batches are already budget-bounded
         t_est = self.model.iter_time(plan.shape)
-        t_remain = max(0.0, t_est - (now - self.t_sched))
+        t_remain = t_est - (now - self.t_sched)
+        if t_remain <= 0.0:
+            # Overdue relative to the estimate.  We are being consulted from
+            # inside the still-running batch (its safepoints call this), so
+            # "zero remaining" is impossible — the profile was optimistic.
+            # Keep one safepoint interval as the conservative remainder so a
+            # mis-estimated long batch can still be preempted.  (Pure config
+            # arithmetic — same formula as transformer.num_segments, inlined
+            # to keep the policy core free of model-layer imports.)
+            periods_per_seg = max(
+                1, self.cfg.safepoint_interval // self.cfg.pattern_period
+            )
+            nseg = -(-self.cfg.num_periods // periods_per_seg)
+            t_remain = t_est / max(1, nseg)
         # time to serve the waiting online queue once this batch drains
         q_shape = BatchShape()
         for r in self.online_q:

@@ -1,16 +1,24 @@
 """Serving launcher — the paper's kind of driver.
 
-Two modes:
-  real  — run the real-execution engine on CPU with a REDUCED variant of the
-          chosen architecture (true JAX compute; used by examples/tests).
-  sim   — run the full-scale config under the calibrated discrete-event
-          cost model (policy evaluation; used by the benchmarks).
+Three modes:
+  sim       — run the full-scale config under the calibrated discrete-event
+              cost model (policy evaluation; used by the benchmarks).
+  real      — run the real-execution engine on CPU with a REDUCED variant of
+              the chosen architecture (true JAX compute; single-threaded:
+              submissions happen up front, then the engine drains).
+  wallclock — full serving stack (DESIGN.md §10): calibrate the engine's
+              measured latency profile, run the engine loop on a background
+              thread via CoServingRuntime, and drive the streaming/batch
+              Frontend from this (the API) thread against the wall clock,
+              printing ServiceMetrics at the end.
 
 Examples:
   PYTHONPATH=src python -m repro.launch.serve --arch llama-2-7b --mode sim \
       --duration 120 --rate 2 --offline 500
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --mode real \
       --online 4 --offline 8 --max-new 16
+  PYTHONPATH=src python -m repro.launch.serve --arch llama-2-7b \
+      --mode wallclock --duration 3 --rate 4 --offline 8
 """
 from __future__ import annotations
 
@@ -85,10 +93,87 @@ def run_real(args) -> None:
           f"ckpt_blocks={eng.ckpt.stats.blocks_checkpointed}")
 
 
+def run_wallclock(args) -> None:
+    """Calibrated wall-clock co-serving: engine thread + API thread."""
+    import time
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.core.profiler import BatchShape
+    from repro.core.scheduler import SchedulerConfig
+    from repro.core.slo import SLO
+    from repro.models import transformer as tf
+    from repro.serving import loadgen
+    from repro.serving.api import Frontend
+    from repro.serving.real_engine import RealEngine, RealEngineConfig
+    from repro.serving.runtime import CoServingRuntime
+
+    cfg = get_config(args.arch).reduced(num_layers=4, safepoint_interval=1)
+    params = tf.init_params(cfg, jax.random.PRNGKey(args.seed))
+    eng = RealEngine(
+        cfg, params,
+        sched_cfg=SchedulerConfig(
+            chunk_size=32, slo_aware=True, avg_ctx_estimate=64,
+            max_batch_seqs=8,
+        ),
+        eng_cfg=RealEngineConfig(
+            max_model_len=128, num_device_blocks=256, max_prefill_batch=4
+        ),
+    )
+    print("calibrating (also warms every jit bucket serving will hit)...")
+    prof = eng.calibrate()
+    t_chunk = prof.iter_time(BatchShape(
+        prefill_tokens=32, prefill_attn_tokens=512.0, prefill_ctx_end=32,
+        num_seqs=1,
+    ))
+    eng.sched.slo = SLO(ttft=args.ttft or 3 * t_chunk, tpot=args.tpot)
+
+    rt = CoServingRuntime(eng)
+    fe = Frontend(rt, clock=rt.now)
+    rng = np.random.default_rng(args.seed)
+    arrivals = loadgen.gamma_arrivals(args.rate, args.cv, args.duration, rng)
+    rt.start()
+    try:
+        job = fe.submit_batch(
+            [rng.integers(0, cfg.vocab_size, args.prompt_len // 16)
+             .astype(np.int32) for _ in range(args.offline)],
+            max_new_tokens=args.max_new // 4,
+        )
+        streams = []
+        for t in arrivals:  # the API thread replays the online trace live
+            while True:
+                gap = t - rt.now()
+                if gap <= 0:
+                    break
+                time.sleep(min(0.005, gap))
+            streams.append(
+                fe.stream(
+                    rng.integers(0, cfg.vocab_size, args.prompt_len // 32)
+                    .astype(np.int32),
+                    args.max_new // 8,
+                )
+            )
+    finally:
+        rt.stop(drain=True)
+    m = rt.metrics()
+    print(f"arch={cfg.name} (reduced) wall-clock on {jax.default_backend()}")
+    print(f"online streams={len(streams)} finished="
+          f"{sum(1 for h in streams if h.finished)}; batch done={job.done}")
+    print(f"p99 TTFT {m.p99_ttft * 1e3:.0f} ms   p99 TPOT "
+          f"{m.p99_tpot * 1e3:.1f} ms   attainment "
+          f"{m.ttft_slo_attainment:.2f}/{m.tpot_slo_attainment:.2f}")
+    print(f"throughput {m.throughput_tokens_per_s:.0f} tok/s "
+          f"(online {m.online_throughput:.0f}, offline "
+          f"{m.offline_throughput:.0f}); safepoint aborts "
+          f"{rt.stats.safepoint_aborts}; preemptions {m.num_preemptions}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama-2-7b")
-    ap.add_argument("--mode", choices=["sim", "real"], default="sim")
+    ap.add_argument("--mode", choices=["sim", "real", "wallclock"],
+                    default="sim")
     ap.add_argument("--duration", type=float, default=120.0)
     ap.add_argument("--rate", type=float, default=2.0)
     ap.add_argument("--cv", type=float, default=1.0)
@@ -96,13 +181,19 @@ def main() -> None:
     ap.add_argument("--online", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=1024)
     ap.add_argument("--max-new", type=int, default=128)
-    ap.add_argument("--ttft", type=float, default=1.5)
+    # default TTFT: 1.5 s for sim/real; wallclock derives it from the
+    # calibration pass when the flag is not given
+    ap.add_argument("--ttft", type=float, default=None)
     ap.add_argument("--tpot", type=float, default=0.110)
     ap.add_argument("--hw", choices=["v5e", "a100"], default="v5e")
     ap.add_argument("--tp", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
-    (run_sim if args.mode == "sim" else run_real)(args)
+    if args.ttft is None and args.mode != "wallclock":
+        args.ttft = 1.5
+    {"sim": run_sim, "real": run_real, "wallclock": run_wallclock}[args.mode](
+        args
+    )
 
 
 if __name__ == "__main__":

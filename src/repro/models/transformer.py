@@ -522,12 +522,21 @@ def decode_step(
 def prefill_chunk_paged(
     cfg: ModelConfig,
     params: PyTree,
-    tokens: jnp.ndarray,  # (B, L) chunk tokens
+    tokens: jnp.ndarray,  # (B, L) chunk tokens (L may be bucket-padded)
     pools: Dict[str, PyTree],
     block_tables: jnp.ndarray,  # (B, M) physical block ids
     offsets: jnp.ndarray,  # (B,) tokens already prefilled per sequence
+    last_index: Optional[jnp.ndarray] = None,  # (B,) logits position
 ) -> Tuple[jnp.ndarray, Dict[str, PyTree]]:
-    """Chunked prefill on the paged layout. Returns (last logits, pools)."""
+    """Chunked prefill on the paged layout. Returns (last logits, pools).
+
+    ``last_index`` supports *bucketed* chunks: the engine pads chunk tokens
+    to a power-of-two length (bounding jit retraces exactly like decode
+    bucketing) and asks for the logits of the last real token.  Padded
+    positions write junk KV only into slots that are overwritten when the
+    real tokens arrive, or into the scratch row / clamped tail — never read
+    before being rewritten (DESIGN.md §7 garbage tolerance).
+    """
     x = embed(cfg, params, tokens)
     b, l = tokens.shape[:2]
     positions = offsets[:, None] + jnp.arange(l, dtype=jnp.int32)[None, :]
@@ -541,7 +550,13 @@ def prefill_chunk_paged(
         block_tables=block_tables,
         capacity_factor=-1.0,
     )
-    return lm_head(cfg, params, x)[:, -1, :], pools
+    if last_index is None:
+        xl = x[:, -1:, :]
+    else:
+        xl = jax.vmap(
+            lambda xi, li: jax.lax.dynamic_slice_in_dim(xi, li, 1, axis=0)
+        )(x, last_index)
+    return lm_head(cfg, params, xl)[:, 0, :], pools
 
 
 def decode_step_paged(
@@ -577,7 +592,8 @@ def run_segment_paged(
     block_tables: jnp.ndarray,
     positions: jnp.ndarray,
 ) -> Tuple[jnp.ndarray, Dict[str, PyTree]]:
-    """One preemptible decode segment on the paged layout (§4.3 safepoints).
+    """One preemptible decode segment on the paged layout (paper §4.3
+    safepoints), addressed by static segment index.
 
     Pool writes of an aborted iteration land at the not-yet-committed
     position and are overwritten verbatim on re-execution, so aborts stay
@@ -598,6 +614,45 @@ def run_segment_paged(
     return x, merge_periods(pools, ps_new, lo, hi)
 
 
+def run_segment_paged_at(
+    cfg: ModelConfig,
+    params: PyTree,
+    seg_periods: int,  # periods in this segment (STATIC under jit)
+    lo: jnp.ndarray,  # starting period (traced)
+    x: jnp.ndarray,
+    pools: Dict[str, PyTree],
+    block_tables: jnp.ndarray,
+    positions: jnp.ndarray,
+) -> Tuple[jnp.ndarray, Dict[str, PyTree]]:
+    """``run_segment_paged`` with a *traced* starting period.
+
+    Jitting the static-index variant compiles one program per segment; with
+    the start traced, every segment of the same length shares a single
+    compiled program, so the safepoint-instrumented decode costs at most
+    two compilations per batch bucket (body segments + a shorter tail)
+    instead of ``num_segments`` — the same bounded-retrace idea as the
+    decode/prefill shape buckets (DESIGN.md §5)."""
+    sl = lambda a: jax.lax.dynamic_slice_in_dim(a, lo, seg_periods, axis=0)
+    lp = jax.tree.map(sl, params["layers"])
+    ps = jax.tree.map(sl, pools)
+    x, ps_new, _ = run_periods(
+        cfg,
+        lp,
+        x,
+        mode="decode",
+        positions=positions,
+        caches=ps,
+        block_tables=block_tables,
+        capacity_factor=-1.0,
+    )
+    merged = jax.tree.map(
+        lambda a, u: jax.lax.dynamic_update_slice_in_dim(a, u, lo, axis=0),
+        pools,
+        ps_new,
+    )
+    return x, merged
+
+
 # ---------------------------------------------------------------------------
 # Segmented execution (ConServe preemption safepoints)
 # ---------------------------------------------------------------------------
@@ -615,6 +670,16 @@ def segment_bounds(cfg: ModelConfig, seg: int) -> Tuple[int, int]:
     lo = seg * pps
     hi = min(cfg.num_periods, lo + pps)
     return lo, hi
+
+
+def segment_spans(cfg: ModelConfig) -> list:
+    """``(lo, periods)`` per segment — the dispatch list consumed by the
+    traced-start segment entry (``run_segment_paged_at``)."""
+    spans = []
+    for s in range(num_segments(cfg)):
+        lo, hi = segment_bounds(cfg, s)
+        spans.append((lo, hi - lo))
+    return spans
 
 
 def slice_periods(tree: PyTree, lo: int, hi: int) -> PyTree:

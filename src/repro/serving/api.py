@@ -4,6 +4,20 @@ Mirrors the paper's frontend split (§4.1): the streaming API assigns high
 priority and returns tokens as they are produced; the Batch API (OpenAI
 Batch style) accepts a pool of requests and resolves asynchronously.  Users
 never set priorities manually (§5) — the API chooses.
+
+A ``Frontend`` binds to anything exposing the engine submission surface:
+``RealEngine`` directly (single-threaded: caller alternates submissions
+with ``engine.step()``/``run()``), or a ``serving.runtime.CoServingRuntime``
+(wall-clock serving: the engine loop runs on its own thread and this API
+may be called from any other thread — DESIGN.md §10).
+
+Admission control: submissions that can never fit the serving configuration
+(``prompt_len + max_new_tokens > max_model_len``) raise
+``core.scheduler.AdmissionError`` *synchronously* from ``stream`` /
+``submit_batch``, before the request enters any queue and before a single
+KV block is allocated — clients get a typed error instead of a mid-run
+``ValueError`` from the paged backend.  ``submit_batch`` validates the whole
+pool before queuing any of it, so a rejected batch leaves no partial state.
 """
 from __future__ import annotations
 
@@ -106,6 +120,13 @@ class Frontend:
                     image_embeds=None if image_embeds is None else image_embeds[i],
                 )
             )
+        # admission is all-or-nothing: validate the pool before queuing any
+        checker = getattr(
+            getattr(self.engine, "sched", None), "check_admission", None
+        )
+        if checker is not None:
+            for r in reqs:
+                checker(r)
         for r in reqs:
             self.engine.submit(r)
         return BatchJob(next(self._jobs), reqs)

@@ -5,8 +5,10 @@ Runs the REAL ConServe policy code — ``UnifiedScheduler`` (Alg. 1+2),
 semantics — against a discrete-event clock whose iteration durations come
 from a latency model (the analytical TPU/A100 roofline model or a measured
 profile).  This is how the paper's figures are reproduced deterministically
-on a CPU-only container (DESIGN.md §3); the real-execution engine in
-``real_engine.py`` runs the same policies with actual JAX compute.
+on a CPU-only container (DESIGN.md §3).  The same policies run on actual
+JAX compute in ``real_engine.py`` (paged backend, DESIGN.md §9), driven
+against the wall clock by ``serving.runtime.CoServingRuntime``
+(DESIGN.md §10) — this module is the simulated-time twin of that loop.
 
 Timing semantics per iteration:
   duration = iter_time(shape) + blocking_swap_time (+ safepoint checks)

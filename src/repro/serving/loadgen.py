@@ -94,6 +94,22 @@ def make_offline_batch(
     return out
 
 
+def attach_prompts(
+    reqs: Sequence[Request], vocab_size: int, rng: np.random.Generator
+) -> List[Request]:
+    """Give trace requests concrete prompt token ids (in place).
+
+    Simulated-time engines schedule on lengths alone; the real-execution
+    runtime (``serving.runtime``) feeds the same traces through actual
+    compute and therefore needs token ids.  Random ids are the right
+    workload for timing (serving cost depends on shape, not content).
+    """
+    for r in reqs:
+        if r.prompt is None:
+            r.prompt = rng.integers(0, vocab_size, r.prompt_len).astype(np.int32)
+    return list(reqs)
+
+
 # ---------------------------------------------------------------------------
 # Workload profiles from the paper's evaluation
 # ---------------------------------------------------------------------------

@@ -15,10 +15,15 @@ Implementation notes:
   to the Pallas ``paged_attention`` kernel on TPU and the ``cache_ops`` jnp
   oracle on CPU.  The last pool row is a scratch block that absorbs writes
   from padded batch rows.
-* Decode batches are formed at fixed bucketed shapes (batch padded to the
-  next power of two, block tables/seq_lens padded to full width) so jit
-  recompilation is bounded by the bucket count, not by every batch size —
-  ``decode_trace_count`` counts actual retraces.
+* Every jitted entry point runs at bucketed shapes so recompilation is
+  bounded by the bucket count, not by workload variety (DESIGN.md §9):
+  decode batches pad to power-of-two buckets (``decode_trace_count``
+  counts retraces); prefill chunks are grouped by power-of-two padded
+  length and dispatched as batched ``prefill_chunk_paged`` calls capped at
+  ``max_prefill_batch`` (``prefill_trace_count``); checkpoint extract /
+  resume restore pad their block-id lists to buckets; segmented decode
+  uses a traced-start program (``run_segment_paged_at``) shared by all
+  equal-length segments.
 * Incremental checkpointing copies completed blocks out of the pool by
   physical id into a ``HostKVStore`` (O(block), no pytree slicing); restore
   scatters them back into whatever physical blocks the resume re-allocated.
@@ -26,15 +31,27 @@ Implementation notes:
 * Archs without plain causal KV (SSM/hybrid, sliding-window ring, cross-attn
   VLM, encoder-only) fall back to the contiguous per-request layout
   (capacity = max_model_len) with full-recompute resume (DESIGN.md §4).
-* Safepoints: pure-offline decode iterations execute as K-layer segments via
-  ``transformer.run_segment[_paged]`` with the preemption flag checked
-  between dispatches (``core.preemption.SegmentedExecution``).
+* Safepoints: every dispatch boundary of a pure-offline iteration — between
+  K-layer decode segments (``core.preemption.SegmentedExecution``) and
+  between batched-prefill groups (paged backend only; prefill KV writes are
+  idempotent there) — checks the preemption flag.  The optional
+  ``arrival_poll`` hook runs at every safepoint so the wall-clock runtime
+  (``serving.runtime``, DESIGN.md §10) can drain API-thread arrivals and let
+  Algorithm 2 abort the batch mid-iteration.
+* Admission: requests whose ``prompt_len + max_new_tokens`` exceed
+  ``max_model_len`` are rejected with ``core.scheduler.AdmissionError`` at
+  submit time, before any KV block is allocated.
+* Calibration: ``calibrate()`` times the engine's own jitted prefill/decode
+  entry points (the chunk sizes and power-of-two decode buckets it really
+  traces) and swaps the scheduler's latency model for the fitted
+  ``MeasuredProfiler`` so SLO token budgets reflect measured wall time.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -46,7 +63,14 @@ from repro.core.checkpoint import (
     HostKVStore,
 )
 from repro.core.preemption import PreemptionFlag, SegmentedExecution
-from repro.core.profiler import AnalyticalCostModel, block_bytes, TPU_V5E
+from repro.core.profiler import (
+    AnalyticalCostModel,
+    CalibrationGrid,
+    MeasuredProfiler,
+    TPU_V5E,
+    block_bytes,
+    calibrate,
+)
 from repro.core.request import Request
 from repro.core.scheduler import SchedulerConfig, UnifiedScheduler
 from repro.core.slo import SLO
@@ -67,6 +91,9 @@ class RealEngineConfig:
     max_steps: int = 100_000
     # "auto": paged when the arch supports it; "paged"/"contiguous" force.
     backend: str = "auto"
+    # largest batched-prefill dispatch (a bigger prefill wave is split into
+    # several dispatches, each boundary a safepoint of pure-offline plans)
+    max_prefill_batch: int = 8
 
 
 class RealEngine:
@@ -91,7 +118,13 @@ class RealEngine:
         sched_cfg = sched_cfg or SchedulerConfig(
             chunk_size=32, slo_aware=False, offline_batch_tokens=4096
         )
-        lat = AnalyticalCostModel(cfg, TPU_V5E)  # used only if slo_aware
+        if sched_cfg.max_model_len is None:
+            # admission control: reject what the paged backend cannot hold
+            # (copy — never mutate a caller-owned, possibly shared config)
+            sched_cfg = dataclasses.replace(
+                sched_cfg, max_model_len=eng_cfg.max_model_len
+            )
+        lat = AnalyticalCostModel(cfg, TPU_V5E)  # until calibrate() replaces it
         self.sched = UnifiedScheduler(cfg, lat, slo, self.blocks, sched_cfg)
 
         if eng_cfg.backend not in ("auto", "paged", "contiguous"):
@@ -122,6 +155,13 @@ class RealEngine:
         self.steps = 0
         self._key = jax.random.PRNGKey(0)
         self.decode_trace_count = 0  # jit retraces of the decode entry point
+        self.prefill_trace_count = 0  # jit retraces of the paged prefill
+        # Runtime hook: called between K-layer segment dispatches of a
+        # pure-offline batch (i.e. at every safepoint) so the wall-clock
+        # runtime can drain arrivals that landed on the API thread and run
+        # Algorithm 2 against the in-flight batch.
+        self.arrival_poll: Optional[Callable[[], None]] = None
+        self.profile: Optional[MeasuredProfiler] = None  # set by calibrate()
 
         if self.paged:
             # Shared physical pools + one scratch row (id num_device_blocks)
@@ -142,18 +182,26 @@ class RealEngine:
                 )
 
             self._decode_jit = jax.jit(_decode_paged, donate_argnums=(1,))
-            self._prefill_jit = jax.jit(
-                lambda toks, pools, tables, off: tf.prefill_chunk_paged(
-                    self.cfg, self.params, toks, pools, tables, off
-                ),
-                donate_argnums=(1,),
-            )
+
+            def _prefill_paged(toks, pools, tables, off, last):
+                self.prefill_trace_count += 1  # runs only while tracing
+                return tf.prefill_chunk_paged(
+                    self.cfg, self.params, toks, pools, tables, off,
+                    last_index=last,
+                )
+
+            self._prefill_jit = jax.jit(_prefill_paged, donate_argnums=(1,))
+            # traced-start segment program: all equal-length segments share
+            # one compilation per batch bucket (run_segment_paged_at)
             self._segment_jit = jax.jit(
-                lambda seg, x, pools, tables, positions: tf.run_segment_paged(
-                    self.cfg, self.params, seg, x, pools, tables, positions
+                lambda pps, lo, x, pools, tables, positions: (
+                    tf.run_segment_paged_at(
+                        self.cfg, self.params, pps, lo, x, pools, tables,
+                        positions,
+                    )
                 ),
                 static_argnums=(0,),
-                donate_argnums=(2,),
+                donate_argnums=(3,),
             )
 
             def _restore(pools, ids, blocks):
@@ -200,17 +248,29 @@ class RealEngine:
             )
 
     # ------------------------------------------------------------------ api
+    def set_clock(self, clock: Callable[[], float]) -> None:
+        """Rebind the engine clock (the wall-clock runtime rebases it to
+        seconds-since-replay-start so timestamps align with trace offsets)."""
+        self._clock = clock
+
     def submit(self, req: Request) -> None:
+        """Queue a request.  Raises ``core.scheduler.AdmissionError`` before
+        any block is allocated if the request cannot fit ``max_model_len``."""
         if req.prompt is None:
             raise ValueError("real engine requires prompt token ids")
         self.sched.submit(req)
 
     def on_online_arrival(self, req: Request) -> None:
-        """Streaming-API entry: may trip the preemption flag (Algorithm 2)."""
+        """Streaming-API entry: may trip the preemption flag (Algorithm 2).
+        Raises ``AdmissionError`` like ``submit`` (before queueing)."""
         if req.prompt is None:
             raise ValueError("real engine requires prompt token ids")
         if self.sched.on_online_arrival(req, self._clock()):
             self.flag.set()
+
+    def _on_safepoint(self, seg_idx: int) -> None:
+        if self.arrival_poll is not None:
+            self.arrival_poll()
 
     # ---------------------------------------------------------------- tokens
     def _tokens_of(self, req: Request) -> np.ndarray:
@@ -234,27 +294,51 @@ class RealEngine:
             b *= 2
         return b
 
+    @staticmethod
+    def _chunk_bucket(n: int) -> int:
+        """Pad prefill-chunk length to a power of two (floor 8) so jit
+        retraces of the paged prefill are bounded by the bucket count, not
+        by every residual chunk length the scheduler produces."""
+        b = 8
+        while b < n:
+            b *= 2
+        return b
+
     def _extract_blocks_paged(self, dev_blocks: List[int]) -> List[Any]:
         """Pack the selected physical blocks with one jitted gather and pull
         them to host in a single transfer (the CPU twin of the Pallas
         ``kv_checkpoint`` staging-DMA path); returns one stored dict per
-        block, in ``dev_blocks`` order."""
-        ids = jnp.asarray(dev_blocks, jnp.int32)
+        block, in ``dev_blocks`` order.
+
+        The id list is padded to a power-of-two bucket (extra rows read the
+        scratch block and are discarded) so the gather program compiles once
+        per bucket instead of once per distinct block count."""
+        n = len(dev_blocks)
+        pad = self._decode_bucket(n)
+        ids = jnp.asarray(
+            list(dev_blocks) + [self._scratch_block] * (pad - n), jnp.int32
+        )
         staged = jax.device_get(self._extract_jit(self.pools, ids))
         return [
             {
                 pos: {"k": b["k"][:, i], "v": b["v"][:, i]}
                 for pos, b in staged.items()
             }
-            for i in range(len(dev_blocks))
+            for i in range(n)
         ]
 
     def _restore_blocks_paged(self, dev_blocks: List[int], stored: List[Any]):
         """Scatter host-stored blocks into (re-allocated) physical pool
         slots — the paper's near-zero-cost resume path.  One jitted donated
         scatter per resume, so the update is in-place O(restored bytes)
-        rather than a pool copy per block."""
-        ids = jnp.asarray(dev_blocks, jnp.int32)
+        rather than a pool copy per block.  Padded to the same power-of-two
+        buckets as extraction (extra rows rewrite the scratch block)."""
+        n = len(dev_blocks)
+        pad = self._decode_bucket(n)
+        ids = jnp.asarray(
+            list(dev_blocks) + [self._scratch_block] * (pad - n), jnp.int32
+        )
+        stored = list(stored) + [stored[-1]] * (pad - n)
         batched = {
             pos: {
                 "k": jnp.stack([s[pos]["k"] for s in stored], axis=1),
@@ -361,63 +445,32 @@ class RealEngine:
 
         aborted = False
         tokens: Dict[int, int] = {}
+        preemptible = (
+            plan.pure_offline
+            and self.ec.enable_safepoints
+            and sched.sc.preempt_running
+        )
+        if not preemptible:
+            # a flag left set after an un-aborted batch must not leak into a
+            # later pure-offline iteration as a spurious abort
+            self.flag.clear()
 
-        # ---- prefill chunks (per sequence; ragged-free) --------------------
-        for chunk in plan.prefill_chunks:
-            r = chunk.request
-            rid = r.request_id
-            if not self.cfg.causal:
-                # Encoder-only (audio): bidirectional — one full forward, no
-                # cache, no chunking (scheduler must be configured with
-                # chunk_size >= prompt_len for these jobs).
-                assert chunk.offset == 0 and chunk.length == r.prompt_len, (
-                    "encoder jobs cannot be chunked"
-                )
-                logits, _, _ = tf.forward_full(
-                    self.cfg, self.params, jnp.asarray(r.prompt)[None]
-                )
-                self._key, sk = jax.random.split(self._key)
-                tokens[rid] = int(sample(logits[:, -1, :], self.sampling, sk)[0])
-                continue
-            toks = self._tokens_of(r)[chunk.offset : chunk.offset + chunk.length]
-            if self.paged:
-                logits, self.pools = self._prefill_jit(
-                    jnp.asarray(toks)[None, :],
-                    self.pools,
-                    jnp.asarray(self._block_table(rid))[None, :],
-                    jnp.array([chunk.offset], jnp.int32),
-                )
-            else:
-                if rid not in self.caches:
-                    self.caches[rid] = self._fresh_cache(r)
-                img = getattr(r, "image_embeds", None)
-                img = img if (img is not None and chunk.offset == 0) else None
-                logits, cache = self._prefill_jit(
-                    jnp.asarray(toks)[None, :],
-                    self.caches[rid],
-                    jnp.array([chunk.offset], jnp.int32),
-                    None if img is None else jnp.asarray(img)[None],
-                )
-                self.caches[rid] = cache
-            if chunk.offset + chunk.length == r.kv_target and r.num_generated == 0:
-                self._key, sk = jax.random.split(self._key)
-                tokens[rid] = int(sample(logits, self.sampling, sk)[0])
+        # ---- prefill chunks ------------------------------------------------
+        if self.paged:
+            aborted = self._prefill_paged_batched(plan, preemptible, tokens)
+        else:
+            self._prefill_contiguous(plan, tokens)
 
         # ---- decode batch ---------------------------------------------------
-        if plan.decode_reqs:
+        if plan.decode_reqs and not aborted:
             reqs = plan.decode_reqs
-            use_safepoints = (
-                plan.pure_offline
-                and self.ec.enable_safepoints
-                and sched.sc.preempt_running
-            )
             if self.paged:
-                logits, aborted = self._decode_paged(reqs, use_safepoints)
+                logits, aborted = self._decode_paged(reqs, preemptible)
             else:
-                logits, aborted = self._decode_contiguous(reqs, use_safepoints)
+                logits, aborted = self._decode_contiguous(reqs, preemptible)
             if not aborted:
                 self._key, sk = jax.random.split(self._key)
-                toks = sample(logits, self.sampling, sk)
+                toks = np.asarray(sample(logits, self.sampling, sk))
                 for i, r in enumerate(reqs):
                     tokens[r.request_id] = int(toks[i])
 
@@ -447,6 +500,129 @@ class RealEngine:
                     if cache is not None:
                         self.host.put(seq_id, idx, self._extract_block(cache, idx))
         return True
+
+    # --------------------------------------------------------------- prefill
+    def _prefill_paged_batched(
+        self, plan, preemptible: bool, tokens: Dict[int, int]
+    ) -> bool:
+        """Execute the plan's prefill chunks as bucket-batched dispatches.
+
+        Chunks are grouped by padded length bucket (``_chunk_bucket``) and
+        each group runs as ONE ``prefill_chunk_paged`` dispatch with the
+        batch padded to a power of two — so a 12-sequence offline wave costs
+        ~1 dispatch instead of 12, jit retraces are bounded by
+        (batch buckets × length buckets), and the measured profile's single
+        per-iteration overhead term matches what actually executes.
+
+        Padding is harmless by construction: padded token positions write
+        junk KV only into slots that are overwritten when the real tokens
+        arrive, or are dropped beyond the table
+        (``cache_ops.write_paged_chunk``); padded batch rows address only
+        the scratch pool row.
+
+        Group boundaries of a pure-offline iteration are safepoints
+        (``preemptible``): KV writes are positional and idempotent, so an
+        aborted iteration re-executes its chunks and rewrites the same
+        bytes.  Returns True if the iteration aborted at such a safepoint.
+        The contiguous fallback keeps decode-only safepoints — SSM state
+        advances are not idempotent.
+        """
+        groups: Dict[int, List] = {}
+        for chunk in plan.prefill_chunks:
+            groups.setdefault(self._chunk_bucket(chunk.length), []).append(
+                chunk
+            )
+        # split oversize groups: dispatch batch is capped so jit shapes stay
+        # within the calibrated (batch bucket × length bucket) grid and a
+        # long wave exposes several safepoint boundaries
+        cap = max(1, self.ec.max_prefill_batch)
+        dispatches = []
+        for lpad in sorted(groups):
+            g = groups[lpad]
+            dispatches += [(lpad, g[i : i + cap]) for i in range(0, len(g), cap)]
+        for gi, (lpad, chunks) in enumerate(dispatches):
+            if preemptible and gi > 0:
+                t0 = time.perf_counter()
+                self._on_safepoint(gi)
+                hit = self.flag.is_set()
+                st = self.safepoints.stats
+                st.checks += 1
+                st.check_seconds += time.perf_counter() - t0
+                if hit:
+                    st.preemptions += 1
+                    self.flag.clear()
+                    return True
+            bp = self._decode_bucket(len(chunks))
+            toks = np.zeros((bp, lpad), np.int32)
+            tables = np.full(
+                (bp, self._table_width), self._scratch_block, np.int32
+            )
+            offs = np.zeros((bp,), np.int32)
+            last = np.zeros((bp,), np.int32)
+            for i, c in enumerate(chunks):
+                toks[i, : c.length] = self._tokens_of(c.request)[
+                    c.offset : c.offset + c.length
+                ]
+                tables[i] = self._block_table(c.request.request_id)
+                offs[i] = c.offset
+                last[i] = c.length - 1
+            logits, self.pools = self._prefill_jit(
+                jnp.asarray(toks),
+                self.pools,
+                jnp.asarray(tables),
+                jnp.asarray(offs),
+                jnp.asarray(last),
+            )
+            done = [
+                i
+                for i, c in enumerate(chunks)
+                if c.offset + c.length == c.request.kv_target
+                and c.request.num_generated == 0
+            ]
+            if done:
+                # one batched sample per dispatch (per-row eager sampling
+                # costs a host round-trip per request)
+                self._key, sk = jax.random.split(self._key)
+                toks = np.asarray(
+                    sample(logits[jnp.asarray(done)], self.sampling, sk)
+                )
+                for j, i in enumerate(done):
+                    tokens[chunks[i].request.request_id] = int(toks[j])
+        return False
+
+    def _prefill_contiguous(self, plan, tokens: Dict[int, int]) -> None:
+        """Per-sequence prefill chunks on the contiguous fallback layout."""
+        for chunk in plan.prefill_chunks:
+            r = chunk.request
+            rid = r.request_id
+            if not self.cfg.causal:
+                # Encoder-only (audio): bidirectional — one full forward, no
+                # cache, no chunking (scheduler must be configured with
+                # chunk_size >= prompt_len for these jobs).
+                assert chunk.offset == 0 and chunk.length == r.prompt_len, (
+                    "encoder jobs cannot be chunked"
+                )
+                logits, _, _ = tf.forward_full(
+                    self.cfg, self.params, jnp.asarray(r.prompt)[None]
+                )
+                self._key, sk = jax.random.split(self._key)
+                tokens[rid] = int(sample(logits[:, -1, :], self.sampling, sk)[0])
+                continue
+            toks = self._tokens_of(r)[chunk.offset : chunk.offset + chunk.length]
+            if rid not in self.caches:
+                self.caches[rid] = self._fresh_cache(r)
+            img = getattr(r, "image_embeds", None)
+            img = img if (img is not None and chunk.offset == 0) else None
+            logits, cache = self._prefill_jit(
+                jnp.asarray(toks)[None, :],
+                self.caches[rid],
+                jnp.array([chunk.offset], jnp.int32),
+                None if img is None else jnp.asarray(img)[None],
+            )
+            self.caches[rid] = cache
+            if chunk.offset + chunk.length == r.kv_target and r.num_generated == 0:
+                self._key, sk = jax.random.split(self._key)
+                tokens[rid] = int(sample(logits, self.sampling, sk)[0])
 
     # ---------------------------------------------------------------- decode
     def _decode_paged(self, reqs: List[Request], use_safepoints: bool):
@@ -485,20 +661,20 @@ class RealEngine:
         x = tf.embed(self.cfg, self.params, last[:, None])
         positions = positions_1d[:, None]
         state = {"x": x}
-        nseg = tf.num_segments(self.cfg)
 
-        def make_seg(i):
+        def make_seg(lo, pps):
             def run():
                 state["x"], self.pools = self._segment_jit(
-                    i, state["x"], self.pools, tables, positions
+                    pps, np.int32(lo), state["x"], self.pools, tables,
+                    positions,
                 )
 
             return run
 
         completed, _done = self.safepoints.run(
-            [make_seg(i) for i in range(nseg)],
+            [make_seg(lo, pps) for lo, pps in tf.segment_spans(self.cfg)],
             preemptible=True,
-            on_safepoint=None,
+            on_safepoint=self._on_safepoint,
         )
         if not completed:
             self.flag.clear()
@@ -544,13 +720,160 @@ class RealEngine:
         completed, _done = self.safepoints.run(
             [make_seg(i) for i in range(nseg)],
             preemptible=True,
-            on_safepoint=None,
+            on_safepoint=self._on_safepoint,
         )
         if not completed:
             self.flag.clear()
             return None, stacked, True
         logits = tf.lm_head(self.cfg, self.params, state["x"])[:, 0, :]
         return logits, state["caches"], False
+
+    # ----------------------------------------------------------- calibration
+    def calibrate(
+        self, grid: Optional[CalibrationGrid] = None
+    ) -> MeasuredProfiler:
+        """On-device calibration pass (DESIGN.md §10).
+
+        Times the engine's *own* jitted entry points — prefill chunks at the
+        scheduler's chunk size and decode batches at the power-of-two bucket
+        sizes the jit cache is keyed on — fits a ``MeasuredProfiler``, and
+        installs it as the scheduler's latency model so ``calc_budget``
+        token budgets reflect measured wall time on this machine instead of
+        the analytical roofline.  Also doubles as a jit warm-up: every shape
+        it times is a shape serving will dispatch, so compilation happens
+        here rather than on the first online request.
+
+        Probe batches address only the scratch pool row (paged) or throwaway
+        caches (contiguous), so calibration never perturbs live KV.  The
+        contiguous path's decode timings include per-call cache allocation
+        (donated buffers can't be reused), slightly overestimating — the
+        conservative direction for SLO budgets.
+        """
+        if not self.cfg.causal:
+            raise ValueError("calibration requires a causal decoder arch")
+        if grid is None:
+            # every chunk bucket the scheduler can produce (lengths are
+            # min(remaining, chunk_size, budget-room) -> buckets 8..chunk)
+            top = self._chunk_bucket(
+                min(self.sched.sc.chunk_size, self.ec.max_model_len)
+            )
+            chunks, c = [], 8
+            while c <= top:
+                chunks.append(c)
+                c *= 2
+            chunks = tuple(chunks)
+            # warm/measure every batch bucket serving can dispatch — decode
+            # pads to _decode_bucket(<= max_batch_seqs), prefill groups to
+            # _decode_bucket(<= max_prefill_batch) — so the request path
+            # never compiles (DESIGN.md §10)
+            buckets, b = [], 1
+            while b <= self._decode_bucket(self.sched.sc.max_batch_seqs):
+                buckets.append(b)
+                b *= 2
+            pbatches, b = [], 1
+            while b <= self._decode_bucket(max(1, self.ec.max_prefill_batch)):
+                pbatches.append(b)
+                b *= 2
+            grid = CalibrationGrid(
+                chunk_sizes=chunks,
+                prefill_batches=tuple(pbatches) if self.paged else (1,),
+                decode_buckets=tuple(buckets),
+            )
+
+        def timed(fn) -> float:
+            for _ in range(grid.warmup):
+                fn()
+            best = float("inf")
+            for _ in range(grid.repeats):
+                t0 = time.perf_counter()
+                fn()
+                best = min(best, time.perf_counter() - t0)
+            return best
+
+        max_ctx = self.ec.max_model_len
+        if self.paged:
+            width, scratch = self._table_width, self._scratch_block
+
+            def prefill_timer(b: int, c: int) -> float:
+                # serve-time dispatches are bucketed in both axes
+                b = self._decode_bucket(b)
+                c = self._chunk_bucket(c)
+                toks = jnp.zeros((b, c), jnp.int32)
+                table = jnp.full((b, width), scratch, jnp.int32)
+                off = jnp.zeros((b,), jnp.int32)
+                last = jnp.full((b,), c - 1, jnp.int32)
+
+                def once():
+                    logits, self.pools = self._prefill_jit(
+                        toks, self.pools, table, off, last
+                    )
+                    jax.block_until_ready(logits)
+
+                return timed(once)
+
+            def decode_timer(b: int, ctx: int) -> float:
+                last = jnp.zeros((b,), jnp.int32)
+                tables = jnp.full((b, width), scratch, jnp.int32)
+                lens = jnp.full((b,), min(ctx, max_ctx - 1), jnp.int32)
+
+                # warm the safepoint-instrumented twin of this bucket (the
+                # pure-offline path dispatches per-segment programs)
+                x = tf.embed(self.cfg, self.params, last[:, None])
+                for lo, pps in tf.segment_spans(self.cfg):
+                    x, self.pools = self._segment_jit(
+                        pps, np.int32(lo), x, self.pools, tables,
+                        lens[:, None],
+                    )
+                jax.block_until_ready(x)
+
+                def once():
+                    logits, self.pools = self._decode_jit(
+                        last, self.pools, tables, lens
+                    )
+                    jax.block_until_ready(logits)
+
+                return timed(once)
+
+            def swap_timer(n: int):
+                nbytes = n * block_bytes(self.cfg, self.ec.block_size)
+                return nbytes, timed(
+                    lambda: self._extract_blocks_paged([scratch] * n)
+                )
+
+        else:
+
+            def prefill_timer(b: int, c: int) -> float:
+                del b  # contiguous prefill is one sequence per dispatch
+                toks = jnp.zeros((1, c), jnp.int32)
+                off = jnp.zeros((1,), jnp.int32)
+
+                def once():
+                    logits, _ = self._prefill_jit(
+                        toks, tf.init_caches(self.cfg, 1, max_ctx), off, None
+                    )
+                    jax.block_until_ready(logits)
+
+                return timed(once)
+
+            def decode_timer(b: int, ctx: int) -> float:
+                last = jnp.zeros((b,), jnp.int32)
+                lens = jnp.full((b,), min(ctx, max_ctx - 1), jnp.int32)
+
+                def once():
+                    logits, _ = self._decode_jit(
+                        last, tf.init_caches(self.cfg, b, max_ctx), lens
+                    )
+                    jax.block_until_ready(logits)
+
+                return timed(once)
+
+            swap_timer = None
+
+        prof = calibrate(prefill_timer, decode_timer, max_ctx, grid, swap_timer)
+        self.profile = prof
+        self.sched.model = prof
+        self.sched._sat_cache = None  # saturation knee derives from the model
+        return prof
 
     # ------------------------------------------------------------------ run
     def run(self, max_steps: Optional[int] = None) -> None:

@@ -1,0 +1,290 @@
+"""Wall-clock co-serving runtime: the unified scheduler driving RealEngine
+under real time (DESIGN.md §10).
+
+This is the loop that turns the policy stack into a *server*: each iteration
+it drains API-thread arrivals, lets ``UnifiedScheduler.plan_iteration`` build
+an ``IterationPlan`` against the wall clock, executes the plan on
+``RealEngine``'s paged backend (prefill chunks, bucketed decode,
+checkpoint/resume copies), and commits sampled tokens back.  The same drain
+hook is installed as the engine's ``arrival_poll``, so it also runs between
+K-layer segment dispatches of a pure-offline batch — an online request that
+lands on the API thread mid-batch is seen at the next *real* safepoint,
+Algorithm 2 runs there, and the batch aborts if TTFT is endangered.
+
+Two ways to feed it:
+
+* ``replay(trace)`` — single-threaded trace replay: requests carry
+  ``arrival_time`` offsets (e.g. from ``serving.loadgen``); the loop delivers
+  each once the wall clock passes its offset and returns ``ServiceMetrics``.
+  This is what ``benchmarks/coserve_wallclock_bench.py`` runs.
+* ``start()`` / ``stop()`` — background engine thread; any other thread
+  (the API) calls ``submit`` / ``on_online_arrival``, which a ``Frontend``
+  bound to the runtime does.  Ingress is a lock-protected queue: scheduler
+  state is mutated only on the engine thread, at loop-top or safepoint
+  drains, so the scheduler itself needs no locking.
+
+Admission control runs synchronously on the submitting thread
+(``UnifiedScheduler.check_admission`` is a pure read): an oversized request
+raises ``AdmissionError`` to the API caller before it is ever queued.
+
+Clocks: the runtime rebases the engine clock to seconds-since-start so
+request timestamps (TTFT/TPOT) align with trace ``arrival_time`` offsets.
+Tests inject a ``ManualClock``; production uses ``time.perf_counter``.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Sequence
+
+from repro.core.request import Request
+from repro.core.scheduler import AdmissionError
+from repro.core.slo import ServiceMetrics, summarize
+
+
+class ManualClock:
+    """Deterministic clock for tests: advances only via ``advance``/``sleep``
+    (plus an optional fixed ``auto_tick`` per reading, emulating compute
+    time passing between observations)."""
+
+    def __init__(self, t0: float = 0.0, auto_tick: float = 0.0):
+        self.t = t0
+        self.auto_tick = auto_tick
+
+    def __call__(self) -> float:
+        t = self.t
+        self.t += self.auto_tick
+        return t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+    def sleep(self, dt: float) -> None:  # duck-types time.sleep
+        self.t += max(0.0, dt)
+
+
+@dataclass
+class RuntimeStats:
+    arrivals_delivered: int = 0
+    rejected: int = 0  # replayed-trace requests failing admission
+    safepoint_aborts: int = 0
+    # flag-set -> abort-observed latency per safepoint abort (Alg. 2
+    # responsiveness, the real-execution twin of SimEngine's list)
+    preemption_latencies: List[float] = field(default_factory=list)
+
+
+class CoServingRuntime:
+    """Drive a ``RealEngine`` with wall-clock arrivals (see module docstring).
+
+    ``engine`` must expose the RealEngine surface: ``step()``, ``steps``,
+    ``sched``, ``flag``, ``safepoints``, ``arrival_poll``, ``set_clock``.
+    """
+
+    def __init__(
+        self,
+        engine,
+        clock: Optional[Callable[[], float]] = None,
+        sleep: Optional[Callable[[float], None]] = None,
+        idle_backoff_s: float = 0.0005,
+    ):
+        self.engine = engine
+        self._clock = clock or time.perf_counter
+        self._sleep = sleep or (
+            clock.sleep if isinstance(clock, ManualClock) else time.sleep
+        )
+        self.idle_backoff_s = idle_backoff_s
+        self.stats = RuntimeStats()
+        self._t0 = self._clock()
+        self._lock = threading.Lock()
+        self._pending: List[Request] = []
+        self._trace: List[Request] = []  # sorted by arrival_time, replay mode
+        self._trace_pos = 0
+        self._abort_trigger_t: Optional[float] = None
+        self._aborts_seen = 0
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        self.duration = 0.0
+        engine.set_clock(self.now)
+        engine.arrival_poll = self._drain_arrivals
+
+    @property
+    def sched(self):
+        """The engine's ``UnifiedScheduler`` (lets a ``Frontend`` bound to
+        the runtime reach admission checks and metrics uniformly)."""
+        return self.engine.sched
+
+    # ---------------------------------------------------------------- clock
+    def now(self) -> float:
+        """Seconds since the runtime was created (or since ``replay`` began)."""
+        return self._clock() - self._t0
+
+    # -------------------------------------------------------------- ingress
+    def submit(self, req: Request) -> None:
+        """Thread-safe submission (either priority class).
+
+        Admission is validated *synchronously* on the calling thread —
+        ``AdmissionError`` propagates to the API caller before the request
+        is queued, and no device state exists for it.
+        """
+        self.engine.sched.check_admission(req)
+        if req.arrival_time == 0.0:
+            req.arrival_time = self.now()
+        with self._lock:
+            self._pending.append(req)
+
+    def on_online_arrival(self, req: Request) -> None:
+        """Streaming-API entry (``Frontend`` binds to this).  The urgent
+        Algorithm 2 decision runs on the engine thread at the next drain
+        point — loop-top or a safepoint inside an in-flight batch."""
+        self.submit(req)
+
+    # ---------------------------------------------------------------- drain
+    def _drain_arrivals(self) -> None:
+        """Deliver due arrivals into the scheduler.  Engine thread only:
+        runs at loop-top each iteration and at every safepoint between
+        K-layer segment dispatches (``engine.arrival_poll``)."""
+        now = self.now()
+        due: List[Request] = []
+        while (
+            self._trace_pos < len(self._trace)
+            and self._trace[self._trace_pos].arrival_time <= now
+        ):
+            due.append(self._trace[self._trace_pos])
+            self._trace_pos += 1
+        with self._lock:
+            if self._pending:
+                due.extend(self._pending)
+                self._pending.clear()
+        for r in due:
+            try:
+                if r.is_online:
+                    was_set = self.engine.flag.is_set()
+                    self.engine.on_online_arrival(r)
+                    if self.engine.flag.is_set() and not was_set:
+                        self._abort_trigger_t = now
+                else:
+                    self.engine.submit(r)
+            except AdmissionError:
+                # replayed traces may contain oversized requests; direct
+                # submitters got the error synchronously in submit()
+                self.stats.rejected += 1
+                continue
+            self.stats.arrivals_delivered += 1
+
+    def _observe_aborts(self) -> None:
+        aborts = self.engine.safepoints.stats.preemptions
+        if aborts > self._aborts_seen:
+            self.stats.safepoint_aborts += aborts - self._aborts_seen
+            self._aborts_seen = aborts
+            if self._abort_trigger_t is not None:
+                self.stats.preemption_latencies.append(
+                    self.now() - self._abort_trigger_t
+                )
+        self._abort_trigger_t = None
+
+    # ----------------------------------------------------------------- loop
+    def _step_once(self) -> bool:
+        """One engine iteration with arrival delivery; returns False when the
+        engine reports no remaining work."""
+        self._drain_arrivals()
+        before = self.engine.steps
+        alive = self.engine.step()
+        self._observe_aborts()
+        if alive and self.engine.steps == before:
+            # work exists but nothing was schedulable (e.g. memory wedged
+            # behind a pending resume): back off instead of spinning
+            self._sleep(self.idle_backoff_s)
+        return alive
+
+    def replay(
+        self,
+        trace: Sequence[Request],
+        duration: Optional[float] = None,
+        drain: bool = True,
+        max_steps: int = 1_000_000,
+    ) -> ServiceMetrics:
+        """Replay a timed trace to completion and return ``ServiceMetrics``.
+
+        ``trace`` requests carry ``arrival_time`` offsets relative to replay
+        start; the loop sleeps through genuinely idle gaps.  With ``drain``
+        (default) requests in flight at ``duration`` run to completion —
+        pass ``drain=False`` to cut off at ``duration`` sharp.
+        """
+        self._trace = sorted(trace, key=lambda r: r.arrival_time)
+        self._trace_pos = 0
+        self._t0 = self._clock()
+        for _ in range(max_steps):
+            now = self.now()
+            if duration is not None and now >= duration and not drain:
+                break
+            alive = self._step_once()
+            if not alive:
+                with self._lock:
+                    if self._pending:
+                        continue
+                if self._trace_pos < len(self._trace):
+                    # idle until the next trace arrival
+                    gap = self._trace[self._trace_pos].arrival_time - self.now()
+                    if gap > 0:
+                        self._sleep(gap)
+                    continue
+                break
+        self.duration = self.now()
+        return self.metrics()
+
+    # -------------------------------------------------------- threaded mode
+    def start(self) -> None:
+        """Run the engine loop on a background thread; submit from any
+        thread via ``submit`` / ``on_online_arrival`` (or a ``Frontend``
+        bound to this runtime)."""
+        if self._thread is not None:
+            raise RuntimeError("runtime already started")
+        self._stop.clear()
+        self._t0 = self._clock()
+
+        def loop():
+            while not self._stop.is_set():
+                if not self._step_once():
+                    # nothing to do: wait for arrivals without burning CPU
+                    time.sleep(self.idle_backoff_s)
+
+        self._thread = threading.Thread(
+            target=loop, name="coserve-engine", daemon=True
+        )
+        self._thread.start()
+
+    def stop(self, drain: bool = True, timeout: float = 60.0) -> None:
+        """Stop the engine thread; with ``drain`` (default), first wait for
+        all in-flight and queued work to finish."""
+        if self._thread is None:
+            return
+        if drain:
+            deadline = time.monotonic() + timeout
+            while time.monotonic() < deadline:
+                with self._lock:
+                    pending = bool(self._pending)
+                s = self.engine.sched
+                if not (
+                    pending
+                    or s.online_q
+                    or s.offline_q
+                    or s.running
+                    or s.preempted
+                ):
+                    break
+                time.sleep(self.idle_backoff_s)
+        self._stop.set()
+        self._thread.join(timeout=timeout)
+        self._thread = None
+        self.duration = self.now()
+
+    # -------------------------------------------------------------- metrics
+    def metrics(self, duration: Optional[float] = None) -> ServiceMetrics:
+        """Wall-clock ``ServiceMetrics`` over everything the engine has seen
+        (the real-execution counterpart of ``SimEngine.metrics``)."""
+        return summarize(
+            self.engine.sched.all_requests(),
+            self.engine.sched.slo,
+            duration or self.duration or self.now(),
+        )

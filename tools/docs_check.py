@@ -1,0 +1,81 @@
+#!/usr/bin/env python
+"""Documentation consistency checker (wired into `make docs-check` and CI).
+
+Fails (exit 1) on:
+  * `DESIGN.md §N` references — in any tracked .py or .md file — that name
+    a section number with no `## §N` heading in DESIGN.md;
+  * relative Markdown links `[text](path)` to files that don't exist.
+
+Bare `§N` citations are NOT checked: by repo convention they cite the
+*source paper*'s sections; only refs qualified with `DESIGN.md` must
+resolve locally.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+DESIGN_REF = re.compile(r"DESIGN\.md\s*§(\d+)")
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)#\s]+)(?:#[^)\s]*)?\)")
+SCAN_DIRS = ("src", "tests", "benchmarks", "examples", "tools")
+
+
+def design_sections() -> set:
+    text = (ROOT / "DESIGN.md").read_text()
+    return {int(m) for m in re.findall(r"^##\s*§(\d+)", text, re.MULTILINE)}
+
+
+def iter_files():
+    yield from ROOT.glob("*.md")
+    for d in SCAN_DIRS:
+        base = ROOT / d
+        if base.is_dir():
+            yield from base.rglob("*.py")
+            yield from base.rglob("*.md")
+
+
+def main() -> int:
+    sections = design_sections()
+    if not sections:
+        print("docs-check: no '## §N' headings found in DESIGN.md")
+        return 1
+    errors = []
+    for path in iter_files():
+        rel = path.relative_to(ROOT)
+        try:
+            text = path.read_text()
+        except UnicodeDecodeError:
+            continue
+        for i, line in enumerate(text.splitlines(), 1):
+            for num in DESIGN_REF.findall(line):
+                if int(num) not in sections:
+                    errors.append(
+                        f"{rel}:{i}: DESIGN.md §{num} does not resolve "
+                        f"(sections: {sorted(sections)})"
+                    )
+            if path.suffix == ".md":
+                for target in MD_LINK.findall(line):
+                    if "://" in target or target.startswith("mailto:"):
+                        continue
+                    resolved = (path.parent / target).resolve()
+                    if not resolved.exists():
+                        errors.append(
+                            f"{rel}:{i}: broken link -> {target}"
+                        )
+    if errors:
+        print(f"docs-check: {len(errors)} problem(s)")
+        for e in errors:
+            print("  " + e)
+        return 1
+    print(
+        f"docs-check: OK ({len(sections)} DESIGN.md sections; "
+        "all §refs and markdown links resolve)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
