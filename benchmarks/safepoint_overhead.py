@@ -4,9 +4,13 @@ Measures (CPU, reduced model — ratios are the point, and the safepoint check
 itself is pure host-side work identical to production):
   * per-safepoint check cost (paper: 988us via torch barrier; ours is a
     host-side flag poll — the TPU dispatch boundary needs no barrier),
-  * instrumentation overhead: segmented decode vs monolithic decode,
+  * instrumentation overhead: segmented decode (``run_segment_paged_at``
+    dispatches on ``RealEngine``) vs monolithic decode,
   * preemption response latency: flag set -> abort observed.
-"""
+
+Usage: PYTHONPATH=src python -m benchmarks.run --only safepoint
+Output: ``safepoint_*`` CSV rows (check cost us, overhead ratio, response
+latency ms)."""
 from __future__ import annotations
 
 import time
