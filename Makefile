@@ -2,15 +2,21 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test test-fast bench bench-wallclock docs-check
+.PHONY: test test-all test-sharded bench bench-wallclock bench-sharded docs-check
 
+# fast default: slow system/wallclock/numerics tests excluded (marker
+# `slow`, registered in pytest.ini); `make test-all` is the escape hatch
 test:
+	python -m pytest -q -m "not slow"
+
+test-all:
 	python -m pytest -x -q
 
-# skip the two slowest modules (kernel interpret sweeps + model numerics)
-test-fast:
-	python -m pytest -x -q --ignore=tests/test_kernels.py \
-	    --ignore=tests/test_models.py
+# exercise the tensor-parallel serving paths on virtual CPU devices
+# (DESIGN.md §11) — what CI's sharded matrix job runs
+test-sharded:
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+	    python -m pytest -q -m "not slow"
 
 bench:
 	python -m benchmarks.paged_decode_bench
@@ -18,6 +24,10 @@ bench:
 # real-execution co-serving on the wall clock (DESIGN.md §10)
 bench-wallclock:
 	python -m benchmarks.coserve_wallclock_bench
+
+# tensor-parallel paged serving at mesh sizes 1/2/4 (DESIGN.md §11)
+bench-sharded:
+	python -m benchmarks.sharded_decode_bench
 
 # fails on broken `DESIGN.md §N` references and dead markdown links
 docs-check:

@@ -56,6 +56,11 @@ def main() -> None:
     ap.add_argument("--tpot", type=float, default=None)
     ap.add_argument("--ttft-scale", type=float, default=1.5)
     ap.add_argument("--tpot-scale", type=float, default=3.0)
+    # tensor-parallel mesh size (DESIGN.md §11).  The default 1-device mesh
+    # runs the mesh-aware code path (placement, constraints) on any machine
+    # and must behave identically to mesh-free serving — the safepoint-abort
+    # guarantee below holds on it unchanged.
+    ap.add_argument("--tp", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -65,6 +70,7 @@ def main() -> None:
     from repro.core.profiler import BatchShape
     from repro.core.scheduler import SchedulerConfig
     from repro.core.slo import SLO
+    from repro.launch.mesh import make_serving_mesh
     from repro.models import transformer as tf
     from repro.serving import loadgen
     from repro.serving.real_engine import RealEngine, RealEngineConfig
@@ -75,6 +81,14 @@ def main() -> None:
     sched_cfg = SchedulerConfig(
         chunk_size=32, slo_aware=True, avg_ctx_estimate=64, max_batch_seqs=8
     )
+    # contiguous-fallback archs (SSM/SWA/cross-attn) cannot shard — run
+    # them mesh-free as before; --tp > 1 on such an arch fails loudly in
+    # RealEngine with the paged-backend requirement
+    mesh = (
+        make_serving_mesh(args.tp)
+        if args.tp > 1 or tf.supports_paged(cfg)
+        else None
+    )
     eng = RealEngine(
         cfg,
         params,
@@ -83,7 +97,7 @@ def main() -> None:
         # every prefill wave exposes at least one safepoint boundary
         eng_cfg=RealEngineConfig(
             max_model_len=128, num_device_blocks=256, block_size=16,
-            max_prefill_batch=4,
+            max_prefill_batch=4, mesh=mesh,
         ),
     )
 
@@ -102,7 +116,7 @@ def main() -> None:
     )
     print(
         f"calibrated model={cfg.name} backend={jax.default_backend()} "
-        f"calibration_s={time.perf_counter() - t0:.1f} "
+        f"tp={args.tp} calibration_s={time.perf_counter() - t0:.1f} "
         f"t_chunk_ms={t_chunk * 1e3:.1f} t_decode_ms={t_dec * 1e3:.1f}"
     )
 

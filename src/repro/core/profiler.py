@@ -319,6 +319,11 @@ def calibrate(
     returns ``(bytes_moved, seconds)`` for a device→host checkpoint copy.
     The executor callables are supplied by the engine (``RealEngine.
     calibrate``) so this module stays free of serving-layer imports.
+
+    Mesh-transparent by construction (DESIGN.md §11): on a tensor-parallel
+    serving mesh the engine's timers dispatch the *sharded* programs and
+    block until every shard finishes, so the fitted profile prices the mesh
+    actually being served — this module never sees devices at all.
     """
     prof = MeasuredProfiler()
     for b in grid.prefill_batches:

@@ -264,3 +264,36 @@ def cache_shardings(cache_spec: PyTree, mesh: Mesh) -> PyTree:
         lambda path, leaf: NamedSharding(mesh, cache_pspec(path, leaf, mesh)),
         cache_spec,
     )
+
+
+# ---------------------------------------------------------------------------
+# paged serving pools (tensor-parallel serving, DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+
+def pool_pspec(shape: Sequence[int], mesh: Mesh) -> P:
+    """Paged-pool leaves are (num_periods, num_blocks, block_size, Hkv, D).
+
+    Tensor-parallel serving shards the KV-HEAD axis over ``model``: every
+    chip owns Hkv/tp heads of *every* physical block, so the block table
+    stays replicated and identical on all chips and block allocation /
+    preemption / checkpoint bookkeeping is mesh-oblivious.  Head counts
+    that don't divide the axis replicate the pool instead — never the
+    head_dim: D is the contraction dim of the attention dots, and a
+    sharded contraction turns into partial-sum all-reduces whose float
+    summation order breaks the bitwise token identity the differential
+    harness asserts (DESIGN.md §11).
+    """
+    spec: list = [None] * len(shape)
+    msize = mesh_axis_size(mesh, "model")
+    if msize > 1 and len(shape) == 5 and shape[3] % msize == 0:
+        spec[3] = "model"
+    return P(*spec)
+
+
+def pool_shardings(pool_spec: PyTree, mesh: Mesh) -> PyTree:
+    """NamedShardings for the paged-pool pytree (arrays or ShapeDtypeStructs
+    both work — only ``.shape`` is read)."""
+    return jax.tree.map(
+        lambda l: NamedSharding(mesh, pool_pspec(l.shape, mesh)), pool_spec
+    )

@@ -17,6 +17,7 @@ from .flash_attention import flash_attention as _flash_pallas
 from .kv_checkpoint import checkpoint_gather as _ckpt_pallas
 from .kv_checkpoint import checkpoint_scatter
 from .paged_attention import paged_attention as _paged_pallas
+from .paged_attention import paged_attention_sharded as _paged_shmap
 
 __all__ = [
     "flash_attention",
@@ -51,12 +52,21 @@ def flash_attention(q, k, v, *, causal=True, sliding_window=0, q_offset=0,
 
 
 def paged_attention(q, k_pool, v_pool, block_tables, seq_lens, *,
-                    logit_softcap=0.0):
+                    logit_softcap=0.0, mesh=None):
+    """``mesh``: tensor-parallel serving mesh (DESIGN.md §11).  The Pallas
+    path shard_maps the kernel over KV heads; the jnp reference needs no
+    explicit handling — its operands arrive sharding-constrained and GSPMD
+    partitions the oracle einsums over the head axis."""
     be = kernel_backend()
     if be == "ref":
         return ref.paged_attention_ref(
             q, k_pool, v_pool, block_tables, seq_lens,
             logit_softcap=logit_softcap,
+        )
+    if mesh is not None:
+        return _paged_shmap(
+            q, k_pool, v_pool, block_tables, seq_lens, mesh,
+            logit_softcap=logit_softcap, interpret=(be == "interpret"),
         )
     return _paged_pallas(
         q, k_pool, v_pool, block_tables, seq_lens,

@@ -136,3 +136,53 @@ def paged_attention(
         interpret=interpret,
     )(tables, seq_lens.astype(jnp.int32), qg, k_pool, v_pool)
     return out.reshape(b, h, d)
+
+
+def paged_attention_sharded(
+    q: jnp.ndarray,  # (B, H, D)
+    k_pool: jnp.ndarray,  # (N, page, Hkv, D)
+    v_pool: jnp.ndarray,
+    block_tables: jnp.ndarray,  # (B, M)
+    seq_lens: jnp.ndarray,  # (B,)
+    mesh,
+    *,
+    logit_softcap: float = 0.0,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Tensor-parallel paged decode attention (DESIGN.md §11).
+
+    shard_maps the kernel over the mesh's ``model`` axis: each chip runs the
+    Pallas grid on its local Hkv/tp heads of every page.  Block tables and
+    sequence lengths are replicated, and no collective runs inside — GQA
+    groups are local by construction because the query-head axis is grouped
+    KV-head-major (``q.reshape(b, hkv, g, d)``), so sharding H into
+    contiguous chunks of H/tp keeps each chip's g queries paired with its
+    own KV heads.  Falls back to the single-program kernel when the head
+    counts don't divide the axis (the pool is replicated in that case).
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    msize = mesh.shape["model"] if "model" in mesh.axis_names else 1
+    h, hkv = q.shape[1], k_pool.shape[2]
+    if msize <= 1 or h % msize or hkv % msize:
+        return paged_attention(
+            q, k_pool, v_pool, block_tables, seq_lens,
+            logit_softcap=logit_softcap, interpret=interpret,
+        )
+    fn = functools.partial(
+        paged_attention, logit_softcap=logit_softcap, interpret=interpret
+    )
+    return shard_map(
+        fn,
+        mesh,
+        in_specs=(
+            P(None, "model", None),
+            P(None, None, "model", None),
+            P(None, None, "model", None),
+            P(None, None),
+            P(None),
+        ),
+        out_specs=P(None, "model", None),
+        check_rep=False,
+    )(q, k_pool, v_pool, block_tables, seq_lens)

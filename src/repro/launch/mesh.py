@@ -19,3 +19,22 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_debug_mesh(data: int = 1, model: int = 1):
     """Tiny mesh for CPU tests (uses however many devices exist)."""
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_serving_mesh(tp: int = 1):
+    """1×tp ("data", "model") mesh for tensor-parallel serving
+    (DESIGN.md §11): the ``model`` axis shards KV pools and attention
+    heads; ``data`` is a placeholder so the sharding helpers' axis lookups
+    apply unchanged.  Uses the first ``tp`` devices, so it works on CPU
+    under ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` as well
+    as on a TPU slice."""
+    import numpy as np
+
+    devs = jax.devices()
+    if len(devs) < tp:
+        raise ValueError(
+            f"serving mesh needs {tp} devices, only {len(devs)} visible"
+        )
+    return jax.sharding.Mesh(
+        np.asarray(devs[:tp]).reshape(1, tp), ("data", "model")
+    )

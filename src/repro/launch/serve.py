@@ -57,17 +57,30 @@ def run_sim(args) -> None:
           f"free discards {eng.ckpt.stats.free_discards}")
 
 
+def _serving_mesh(tp: int):
+    """tp>1 -> a 1×tp tensor-parallel mesh (DESIGN.md §11); tp=1 -> None
+    (plain single-device execution, also the path for contiguous-fallback
+    archs which cannot shard)."""
+    if tp <= 1:
+        return None
+    from repro.launch.mesh import make_serving_mesh
+
+    return make_serving_mesh(tp)
+
+
 def run_real(args) -> None:
     import jax
 
     from repro.configs import get_config
     from repro.models import transformer as tf
     from repro.serving.api import Frontend
-    from repro.serving.real_engine import RealEngine
+    from repro.serving.real_engine import RealEngine, RealEngineConfig
 
     cfg = get_config(args.arch).reduced()
     params = tf.init_params(cfg, jax.random.PRNGKey(args.seed))
-    eng = RealEngine(cfg, params)
+    eng = RealEngine(
+        cfg, params, eng_cfg=RealEngineConfig(mesh=_serving_mesh(args.tp))
+    )
     fe = Frontend(eng)
     rng = np.random.default_rng(args.seed)
 
@@ -118,7 +131,8 @@ def run_wallclock(args) -> None:
             max_batch_seqs=8,
         ),
         eng_cfg=RealEngineConfig(
-            max_model_len=128, num_device_blocks=256, max_prefill_batch=4
+            max_model_len=128, num_device_blocks=256, max_prefill_batch=4,
+            mesh=_serving_mesh(args.tp),
         ),
     )
     print("calibrating (also warms every jit bucket serving will hit)...")
@@ -186,6 +200,8 @@ def main() -> None:
     ap.add_argument("--ttft", type=float, default=None)
     ap.add_argument("--tpot", type=float, default=0.110)
     ap.add_argument("--hw", choices=["v5e", "a100"], default="v5e")
+    # sim: chips in the cost model; real/wallclock: tensor-parallel mesh
+    # size for the paged backend (needs >= tp visible devices, §11)
     ap.add_argument("--tp", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()

@@ -403,7 +403,64 @@ def cached_attention(
 # Padding: negative table entries are read as zeros on the gather path and
 # *drop* writes on the scatter path; the engine additionally points padded
 # batch rows at a dedicated scratch block so their shapes stay uniform.
+#
+# Tensor-parallel serving (DESIGN.md §11): when a ``mesh`` is passed, the
+# pool and the q/k/v head axes are constrained over the mesh's ``model``
+# axis, so GSPMD computes attention head-parallel; the attention output is
+# gathered (an exact, arithmetic-free collective) before the output
+# projection so no contraction ever runs over a sharded dim — sharded
+# serving therefore emits bitwise-identical tokens.
 # ---------------------------------------------------------------------------
+
+
+def _kv_shard_mesh(pool: Dict[str, jnp.ndarray], mesh):
+    """The mesh to shard this layer's paged attention over, or None.
+
+    Sharding is all-or-nothing per layer, keyed on the POOL's KV-head
+    count: when Hkv doesn't divide the model axis the pool replicates
+    (``pool_pspec``), and q must then stay unsharded too — a head-sharded
+    q feeding the single-program Pallas kernel (a custom call with no SPMD
+    partitioning rule) would fail to partition on a real mesh even though
+    q's own head count divides."""
+    if mesh is None or "model" not in mesh.axis_names:
+        return None
+    msize = mesh.shape["model"]
+    if msize <= 1 or pool["k"].shape[-2] % msize:
+        return None
+    return mesh
+
+
+def shard_paged_heads(x: jnp.ndarray, mesh, head_axis: int) -> jnp.ndarray:
+    """Constrain the (kv-)head axis of ``x`` over the mesh's ``model`` axis.
+
+    No-op when ``mesh`` is None, the axis is absent/size-1, or the head
+    count doesn't divide it (replication keeps numerics exact; see
+    ``distributed.sharding.pool_pspec`` for why head_dim is never the
+    fallback)."""
+    if mesh is None or "model" not in mesh.axis_names:
+        return x
+    msize = mesh.shape["model"]
+    head_axis = head_axis % x.ndim
+    if msize <= 1 or x.shape[head_axis] % msize:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    spec: list = [None] * x.ndim
+    spec[head_axis] = "model"
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec))
+    )
+
+
+def replicate_on_mesh(x: jnp.ndarray, mesh) -> jnp.ndarray:
+    """Gather ``x`` to every chip of ``mesh`` (exact — pure data movement).
+    Applied to the attention output before ``out_proj`` so the h·hd
+    contraction is never sharded (bitwise token identity, DESIGN.md §11)."""
+    if mesh is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P()))
 
 
 def paged_prefill_attention(
@@ -413,6 +470,7 @@ def paged_prefill_attention(
     pool: Dict[str, jnp.ndarray],
     block_tables: jnp.ndarray,  # (B, M)
     positions: jnp.ndarray,  # (B, L) absolute positions of the chunk
+    mesh=None,  # tensor-parallel serving mesh (DESIGN.md §11)
 ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
     """Chunked prefill against the shared paged pool.
 
@@ -423,12 +481,18 @@ def paged_prefill_attention(
     """
     from repro.kvcache.cache_ops import gather_paged, write_paged_chunk
 
+    mesh = _kv_shard_mesh(pool, mesh)
     q, k, v = project_qkv(cfg, p, x)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard_paged_heads(q, mesh, 2)
+    k = shard_paged_heads(k, mesh, 2)
+    v = shard_paged_heads(v, mesh, 2)
     k_pool, v_pool = write_paged_chunk(
         pool["k"], pool["v"], k, v, block_tables, positions
     )
+    k_pool = shard_paged_heads(k_pool, mesh, 2)
+    v_pool = shard_paged_heads(v_pool, mesh, 2)
     bs = k_pool.shape[1]
     max_ctx = block_tables.shape[1] * bs
     kk = gather_paged(k_pool, block_tables, max_ctx)  # (B, T, Hkv, D)
@@ -442,6 +506,7 @@ def paged_prefill_attention(
     # columns) are excluded.  Paged mode never runs sliding-window archs.
     mask = causal_mask(positions, kv_pos)
     attn = gqa_scores_softmax_values(q, kk, vv, mask, cfg.logit_softcap)
+    attn = replicate_on_mesh(attn, mesh)
     return out_proj(p, attn), {"k": k_pool, "v": v_pool}
 
 
@@ -452,25 +517,34 @@ def paged_decode_attention(
     pool: Dict[str, jnp.ndarray],
     block_tables: jnp.ndarray,  # (B, M)
     positions: jnp.ndarray,  # (B, 1) — the new token's absolute position
+    mesh=None,  # tensor-parallel serving mesh (DESIGN.md §11)
 ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
     """One-token decode against the shared paged pool.
 
-    Dispatches to the Pallas ``paged_attention`` kernel on TPU and the
-    ``cache_ops`` jnp oracle on CPU (see ``repro.kernels.ops``).
+    Dispatches to the Pallas ``paged_attention`` kernel on TPU (shard_mapped
+    over KV heads when a mesh is given) and the ``cache_ops`` jnp oracle on
+    CPU (see ``repro.kernels.ops``).
     """
     from repro.kernels import ops as kernel_ops
     from repro.kvcache.cache_ops import append_paged
 
+    mesh = _kv_shard_mesh(pool, mesh)
     q, k, v = project_qkv(cfg, p, x)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard_paged_heads(q, mesh, 2)
+    k = shard_paged_heads(k, mesh, 2)
+    v = shard_paged_heads(v, mesh, 2)
     k_pool, v_pool = append_paged(
         pool["k"], pool["v"], k[:, 0], v[:, 0], block_tables, positions[:, 0]
     )
+    k_pool = shard_paged_heads(k_pool, mesh, 2)
+    v_pool = shard_paged_heads(v_pool, mesh, 2)
     out = kernel_ops.paged_attention(
         q[:, 0], k_pool, v_pool, block_tables, positions[:, 0] + 1,
-        logit_softcap=cfg.logit_softcap,
+        logit_softcap=cfg.logit_softcap, mesh=mesh,
     )
+    out = replicate_on_mesh(out, mesh)
     return out_proj(p, out[:, None]), {"k": k_pool, "v": v_pool}
 
 

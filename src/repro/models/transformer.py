@@ -180,6 +180,22 @@ def init_paged_pools(
     }
 
 
+def constrain_paged_pools(pools: Dict[str, PyTree], mesh) -> Dict[str, PyTree]:
+    """Pin the pools' KV-head sharding (DESIGN.md §11).
+
+    Applied at the entry and exit of every paged entry point so GSPMD keeps
+    the tensor-parallel layout stable across the period scan and the
+    engine's donated-buffer reuse (a drifting output sharding would force a
+    reshard copy on every dispatch).  No-op without a mesh."""
+    if mesh is None:
+        return pools
+    from repro.distributed.sharding import pool_shardings
+
+    return jax.tree.map(
+        jax.lax.with_sharding_constraint, pools, pool_shardings(pools, mesh)
+    )
+
+
 def init_caches(
     cfg: ModelConfig,
     batch: int,
@@ -231,6 +247,7 @@ def _apply_layer(
     img_x: Optional[jnp.ndarray],
     capacity_factor: float,
     block_tables: Optional[jnp.ndarray] = None,  # paged physical layout
+    mesh=None,  # tensor-parallel serving mesh (paged path only, §11)
 ) -> Tuple[jnp.ndarray, Optional[PyTree], jnp.ndarray]:
     """Returns (x_out, new_cache, aux_loss).
 
@@ -272,7 +289,8 @@ def _apply_layer(
                 else paged_prefill_attention
             )
             mix, new_cache = attn_fn(
-                cfg, lp["mixer"], h, cache, block_tables, positions
+                cfg, lp["mixer"], h, cache, block_tables, positions,
+                mesh=mesh,
             )
         elif mode == "full":
             mix = dense_attention(cfg, lp["mixer"], h, positions)
@@ -351,6 +369,7 @@ def run_periods(
     capacity_factor: float = 1.25,
     remat: bool = False,
     block_tables: Optional[jnp.ndarray] = None,  # paged: caches are pools
+    mesh=None,  # tensor-parallel serving mesh (paged path only, §11)
 ) -> Tuple[jnp.ndarray, Optional[Dict[str, PyTree]], jnp.ndarray]:
     """Scan the pattern periods. Returns (x, new_caches, total_aux)."""
     pattern = cfg.layer_pattern()
@@ -376,6 +395,7 @@ def run_periods(
                 img_x=img_x,
                 capacity_factor=capacity_factor,
                 block_tables=block_tables,
+                mesh=mesh,
             )
             if cache_in is not None:
                 new_caches[str(i)] = c_out
@@ -527,6 +547,7 @@ def prefill_chunk_paged(
     block_tables: jnp.ndarray,  # (B, M) physical block ids
     offsets: jnp.ndarray,  # (B,) tokens already prefilled per sequence
     last_index: Optional[jnp.ndarray] = None,  # (B,) logits position
+    mesh=None,  # tensor-parallel serving mesh (DESIGN.md §11)
 ) -> Tuple[jnp.ndarray, Dict[str, PyTree]]:
     """Chunked prefill on the paged layout. Returns (last logits, pools).
 
@@ -537,6 +558,7 @@ def prefill_chunk_paged(
     real tokens arrive, or into the scratch row / clamped tail — never read
     before being rewritten (DESIGN.md §7 garbage tolerance).
     """
+    pools = constrain_paged_pools(pools, mesh)
     x = embed(cfg, params, tokens)
     b, l = tokens.shape[:2]
     positions = offsets[:, None] + jnp.arange(l, dtype=jnp.int32)[None, :]
@@ -549,7 +571,9 @@ def prefill_chunk_paged(
         caches=pools,
         block_tables=block_tables,
         capacity_factor=-1.0,
+        mesh=mesh,
     )
+    pools = constrain_paged_pools(pools, mesh)
     if last_index is None:
         xl = x[:, -1:, :]
     else:
@@ -566,8 +590,10 @@ def decode_step_paged(
     pools: Dict[str, PyTree],
     block_tables: jnp.ndarray,  # (B, M)
     seq_lens: jnp.ndarray,  # (B,) current lengths (new token position)
+    mesh=None,  # tensor-parallel serving mesh (DESIGN.md §11)
 ) -> Tuple[jnp.ndarray, Dict[str, PyTree]]:
     """One decode iteration on the paged layout. Returns (logits, pools)."""
+    pools = constrain_paged_pools(pools, mesh)
     x = embed(cfg, params, last_tokens[:, None])
     positions = seq_lens[:, None]
     x, pools, _ = run_periods(
@@ -579,8 +605,9 @@ def decode_step_paged(
         caches=pools,
         block_tables=block_tables,
         capacity_factor=-1.0,
+        mesh=mesh,
     )
-    return lm_head(cfg, params, x)[:, 0, :], pools
+    return lm_head(cfg, params, x)[:, 0, :], constrain_paged_pools(pools, mesh)
 
 
 def run_segment_paged(
@@ -591,6 +618,7 @@ def run_segment_paged(
     pools: Dict[str, PyTree],
     block_tables: jnp.ndarray,
     positions: jnp.ndarray,
+    mesh=None,  # tensor-parallel serving mesh (DESIGN.md §11)
 ) -> Tuple[jnp.ndarray, Dict[str, PyTree]]:
     """One preemptible decode segment on the paged layout (paper §4.3
     safepoints), addressed by static segment index.
@@ -600,7 +628,7 @@ def run_segment_paged(
     stateless exactly as in the contiguous path."""
     lo, hi = segment_bounds(cfg, seg)
     lp = slice_periods(params["layers"], lo, hi)
-    ps = slice_periods(pools, lo, hi)
+    ps = slice_periods(constrain_paged_pools(pools, mesh), lo, hi)
     x, ps_new, _ = run_periods(
         cfg,
         lp,
@@ -610,8 +638,11 @@ def run_segment_paged(
         caches=ps,
         block_tables=block_tables,
         capacity_factor=-1.0,
+        mesh=mesh,
     )
-    return x, merge_periods(pools, ps_new, lo, hi)
+    return x, constrain_paged_pools(
+        merge_periods(pools, ps_new, lo, hi), mesh
+    )
 
 
 def run_segment_paged_at(
@@ -623,6 +654,7 @@ def run_segment_paged_at(
     pools: Dict[str, PyTree],
     block_tables: jnp.ndarray,
     positions: jnp.ndarray,
+    mesh=None,  # tensor-parallel serving mesh (DESIGN.md §11)
 ) -> Tuple[jnp.ndarray, Dict[str, PyTree]]:
     """``run_segment_paged`` with a *traced* starting period.
 
@@ -632,6 +664,7 @@ def run_segment_paged_at(
     two compilations per batch bucket (body segments + a shorter tail)
     instead of ``num_segments`` — the same bounded-retrace idea as the
     decode/prefill shape buckets (DESIGN.md §5)."""
+    pools = constrain_paged_pools(pools, mesh)
     sl = lambda a: jax.lax.dynamic_slice_in_dim(a, lo, seg_periods, axis=0)
     lp = jax.tree.map(sl, params["layers"])
     ps = jax.tree.map(sl, pools)
@@ -644,13 +677,14 @@ def run_segment_paged_at(
         caches=ps,
         block_tables=block_tables,
         capacity_factor=-1.0,
+        mesh=mesh,
     )
     merged = jax.tree.map(
         lambda a, u: jax.lax.dynamic_update_slice_in_dim(a, u, lo, axis=0),
         pools,
         ps_new,
     )
-    return x, merged
+    return x, constrain_paged_pools(merged, mesh)
 
 
 # ---------------------------------------------------------------------------

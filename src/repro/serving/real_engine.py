@@ -31,6 +31,14 @@ Implementation notes:
 * Archs without plain causal KV (SSM/hybrid, sliding-window ring, cross-attn
   VLM, encoder-only) fall back to the contiguous per-request layout
   (capacity = max_model_len) with full-recompute resume (DESIGN.md §4).
+* Tensor parallelism (DESIGN.md §11): ``RealEngineConfig.mesh`` runs the
+  paged backend sharded over the mesh's ``model`` axis — pools and
+  attention shard over KV heads (``distributed.sharding.pool_pspec``),
+  params / tables / token ids replicate, and the attention output is
+  gathered before the output projection so no contraction runs over a
+  sharded dim.  Sharded serving therefore emits bitwise-identical greedy
+  tokens (asserted by ``tests/test_backend_differential.py``); a 1-device
+  mesh is behaviorally identical to ``mesh=None``.
 * Safepoints: every dispatch boundary of a pure-offline iteration — between
   K-layer decode segments (``core.preemption.SegmentedExecution``) and
   between batched-prefill groups (paged backend only; prefill KV writes are
@@ -94,6 +102,11 @@ class RealEngineConfig:
     # largest batched-prefill dispatch (a bigger prefill wave is split into
     # several dispatches, each boundary a safepoint of pure-offline plans)
     max_prefill_batch: int = 8
+    # Tensor-parallel serving mesh (jax.sharding.Mesh with a "model" axis;
+    # see launch.mesh.make_serving_mesh).  Paged backend only: the shared
+    # pools shard over KV heads, everything host-side stays mesh-oblivious
+    # (DESIGN.md §11).  None = plain single-device execution.
+    mesh: Optional[Any] = None
 
 
 class RealEngine:
@@ -132,6 +145,22 @@ class RealEngine:
         if eng_cfg.backend == "paged" and not tf.supports_paged(cfg):
             raise ValueError(f"{cfg.name}: arch cannot run the paged backend")
         self.paged = eng_cfg.backend != "contiguous" and tf.supports_paged(cfg)
+
+        self.mesh = eng_cfg.mesh
+        if self.mesh is not None:
+            if "model" not in self.mesh.axis_names:
+                raise ValueError("serving mesh needs a 'model' axis")
+            if not self.paged:
+                raise ValueError(
+                    "tensor-parallel serving requires the paged backend "
+                    f"({cfg.name} resolved to the contiguous fallback)"
+                )
+            from jax.sharding import NamedSharding, PartitionSpec
+
+            # Params, tables, token ids, lengths replicate; only the KV
+            # pools (and the attention compute addressing them) shard.
+            self._replicated = NamedSharding(self.mesh, PartitionSpec())
+            self.params = jax.device_put(params, self._replicated)
 
         # KV-block checkpoint/restore is exact for plain causal-attention
         # archs; SSM state, ring-buffer (SWA) caches and static cross-attn KV
@@ -174,11 +203,18 @@ class RealEngine:
             self.pools = tf.init_paged_pools(
                 cfg, eng_cfg.num_device_blocks + 1, eng_cfg.block_size
             )
+            if self.mesh is not None:
+                from repro.distributed.sharding import pool_shardings
+
+                self.pools = jax.device_put(
+                    self.pools, pool_shardings(self.pools, self.mesh)
+                )
 
             def _decode_paged(last, pools, tables, lens):
                 self.decode_trace_count += 1  # runs only while tracing
                 return tf.decode_step_paged(
-                    self.cfg, self.params, last, pools, tables, lens
+                    self.cfg, self.params, last, pools, tables, lens,
+                    mesh=self.mesh,
                 )
 
             self._decode_jit = jax.jit(_decode_paged, donate_argnums=(1,))
@@ -187,7 +223,7 @@ class RealEngine:
                 self.prefill_trace_count += 1  # runs only while tracing
                 return tf.prefill_chunk_paged(
                     self.cfg, self.params, toks, pools, tables, off,
-                    last_index=last,
+                    last_index=last, mesh=self.mesh,
                 )
 
             self._prefill_jit = jax.jit(_prefill_paged, donate_argnums=(1,))
@@ -197,7 +233,7 @@ class RealEngine:
                 lambda pps, lo, x, pools, tables, positions: (
                     tf.run_segment_paged_at(
                         self.cfg, self.params, pps, lo, x, pools, tables,
-                        positions,
+                        positions, mesh=self.mesh,
                     )
                 ),
                 static_argnums=(0,),
@@ -205,17 +241,23 @@ class RealEngine:
             )
 
             def _restore(pools, ids, blocks):
-                return {
+                new = {
                     pos: {
                         "k": pool["k"].at[:, ids].set(blocks[pos]["k"]),
                         "v": pool["v"].at[:, ids].set(blocks[pos]["v"]),
                     }
                     for pos, pool in pools.items()
                 }
+                # restored blocks arrive replicated from the host store;
+                # each shard keeps only its own heads of them (exact)
+                return tf.constrain_paged_pools(new, self.mesh)
 
             self._restore_jit = jax.jit(_restore, donate_argnums=(0,))
 
             def _extract(pools, ids):
+                # the gather runs shard-local (head sharding is on an
+                # unindexed dim); device_get assembles full-head blocks so
+                # the host store stays mesh-oblivious
                 return {
                     pos: {"k": pool["k"][:, ids], "v": pool["v"][:, ids]}
                     for pos, pool in pools.items()
@@ -272,6 +314,16 @@ class RealEngine:
         if self.arrival_poll is not None:
             self.arrival_poll()
 
+    # ------------------------------------------------------------- placement
+    def _put(self, x) -> jnp.ndarray:
+        """Device-place one host-built jit input.  On a serving mesh, token
+        ids / block tables / lengths / host-staged KV are replicated —
+        every chip runs the same SPMD program over the same addressing
+        metadata, only the pools (and heads) differ per shard."""
+        if self.mesh is None:
+            return jnp.asarray(x)
+        return jax.device_put(np.asarray(x), self._replicated)
+
     # ---------------------------------------------------------------- tokens
     def _tokens_of(self, req: Request) -> np.ndarray:
         return np.concatenate(
@@ -315,8 +367,10 @@ class RealEngine:
         per bucket instead of once per distinct block count."""
         n = len(dev_blocks)
         pad = self._decode_bucket(n)
-        ids = jnp.asarray(
-            list(dev_blocks) + [self._scratch_block] * (pad - n), jnp.int32
+        ids = self._put(
+            np.asarray(
+                list(dev_blocks) + [self._scratch_block] * (pad - n), np.int32
+            )
         )
         staged = jax.device_get(self._extract_jit(self.pools, ids))
         return [
@@ -335,14 +389,16 @@ class RealEngine:
         buckets as extraction (extra rows rewrite the scratch block)."""
         n = len(dev_blocks)
         pad = self._decode_bucket(n)
-        ids = jnp.asarray(
-            list(dev_blocks) + [self._scratch_block] * (pad - n), jnp.int32
+        ids = self._put(
+            np.asarray(
+                list(dev_blocks) + [self._scratch_block] * (pad - n), np.int32
+            )
         )
         stored = list(stored) + [stored[-1]] * (pad - n)
         batched = {
             pos: {
-                "k": jnp.stack([s[pos]["k"] for s in stored], axis=1),
-                "v": jnp.stack([s[pos]["v"] for s in stored], axis=1),
+                "k": self._put(np.stack([s[pos]["k"] for s in stored], axis=1)),
+                "v": self._put(np.stack([s[pos]["v"] for s in stored], axis=1)),
             }
             for pos in stored[0]
         }
@@ -567,11 +623,11 @@ class RealEngine:
                 offs[i] = c.offset
                 last[i] = c.length - 1
             logits, self.pools = self._prefill_jit(
-                jnp.asarray(toks),
+                self._put(toks),
                 self.pools,
-                jnp.asarray(tables),
-                jnp.asarray(offs),
-                jnp.asarray(last),
+                self._put(tables),
+                self._put(offs),
+                self._put(last),
             )
             done = [
                 i
@@ -639,7 +695,7 @@ class RealEngine:
             last[i] = self._tokens_of(r)[-1]
             lens[i] = r.total_len - 1
         last_j, tables_j, lens_j = (
-            jnp.asarray(last), jnp.asarray(tables), jnp.asarray(lens)
+            self._put(last), self._put(tables), self._put(lens)
         )
         if use_safepoints:
             logits, aborted = self._segmented_decode_paged(
@@ -798,10 +854,10 @@ class RealEngine:
                 # serve-time dispatches are bucketed in both axes
                 b = self._decode_bucket(b)
                 c = self._chunk_bucket(c)
-                toks = jnp.zeros((b, c), jnp.int32)
-                table = jnp.full((b, width), scratch, jnp.int32)
-                off = jnp.zeros((b,), jnp.int32)
-                last = jnp.full((b,), c - 1, jnp.int32)
+                toks = self._put(np.zeros((b, c), np.int32))
+                table = self._put(np.full((b, width), scratch, np.int32))
+                off = self._put(np.zeros((b,), np.int32))
+                last = self._put(np.full((b,), c - 1, np.int32))
 
                 def once():
                     logits, self.pools = self._prefill_jit(
@@ -812,9 +868,11 @@ class RealEngine:
                 return timed(once)
 
             def decode_timer(b: int, ctx: int) -> float:
-                last = jnp.zeros((b,), jnp.int32)
-                tables = jnp.full((b, width), scratch, jnp.int32)
-                lens = jnp.full((b,), min(ctx, max_ctx - 1), jnp.int32)
+                last = self._put(np.zeros((b,), np.int32))
+                tables = self._put(np.full((b, width), scratch, np.int32))
+                lens = self._put(
+                    np.full((b,), min(ctx, max_ctx - 1), np.int32)
+                )
 
                 # warm the safepoint-instrumented twin of this bucket (the
                 # pure-offline path dispatches per-segment programs)

@@ -1,10 +1,19 @@
 import os
+import re
 import sys
 
-# Tests must see the single real CPU device (the 512-device override is for
-# launch/dryrun.py ONLY — see the system design notes).
-assert "xla_force_host_platform_device_count" not in os.environ.get(
-    "XLA_FLAGS", ""
-), "do not set the dry-run device override globally"
+# The suite runs either on the single real CPU device or under a SMALL
+# virtual-device override (CI's sharded matrix job sets
+# XLA_FLAGS=--xla_force_host_platform_device_count=4 so the tensor-parallel
+# serving paths are exercised — DESIGN.md §11).  The 512-device dry-run
+# override stays forbidden here: it is for launch/dryrun.py ONLY.
+_m = re.search(
+    r"xla_force_host_platform_device_count=(\d+)",
+    os.environ.get("XLA_FLAGS", ""),
+)
+assert _m is None or int(_m.group(1)) <= 8, (
+    "do not set the dry-run device override globally "
+    "(sharded-serving tests use <= 8 virtual devices)"
+)
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -48,6 +48,7 @@ def test_smoke_forward(arch):
     assert bool(jnp.isfinite(aux))
 
 
+@pytest.mark.slow  # forward smoke (fast) keeps per-arch coverage
 @pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
 def test_smoke_train_step(arch):
     cfg = get_config(arch).reduced()

@@ -1,0 +1,171 @@
+"""Differential token-identity harness across execution backends.
+
+One trace, three executions of RealEngine — they must emit byte-identical
+greedy tokens (DESIGN.md §11):
+
+  * ``contiguous``   — per-request stacked caches (the §4 fallback layout),
+  * ``paged``        — shared block pool, single device,
+  * ``sharded paged``— the same pool sharded over a tensor-parallel serving
+                       mesh (``launch.mesh.make_serving_mesh``).
+
+The sharded leg uses as many devices as are visible (capped at 4): under
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (CI's sharded matrix
+job) it genuinely distributes KV heads; on a single real device it
+degenerates to a 1-device mesh, which still exercises the whole mesh code
+path (placement, constraints, replicated inputs) and must be behaviorally
+identical to ``mesh=None``.
+
+Cases sweep the two axes where backends could plausibly diverge:
+batch-bucket boundaries (decode batches draining across the power-of-two
+buckets, prompt lengths straddling prefill length buckets) and
+preempt/resume points (online bursts at different step offsets forcing
+eviction + incremental-checkpoint restore mid-generation).
+"""
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.request import Priority, Request
+from repro.launch.mesh import make_serving_mesh
+from repro.models import transformer as tf
+from repro.serving.real_engine import RealEngine, RealEngineConfig
+
+
+@functools.lru_cache(maxsize=None)
+def _model(arch: str):
+    cfg = get_config(arch).reduced()
+    return cfg, tf.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _mkreq(cfg, prio, plen, gen, seed):
+    prompt = (
+        np.random.default_rng(seed)
+        .integers(0, cfg.vocab_size, plen)
+        .astype(np.int32)
+    )
+    return Request(prio, prompt_len=plen, max_new_tokens=gen, prompt=prompt)
+
+
+def _run(arch, backend, jobs, preempt_step, mesh=None, eng_kw=None):
+    """Run one trace; returns (offline outputs, online outputs, requests)."""
+    cfg, params = _model(arch)
+    eng = RealEngine(
+        cfg, params,
+        eng_cfg=RealEngineConfig(backend=backend, mesh=mesh, **(eng_kw or {})),
+    )
+    reqs = [
+        _mkreq(cfg, Priority.OFFLINE, plen, gen, seed)
+        for seed, (plen, gen) in enumerate(jobs)
+    ]
+    for r in reqs:
+        eng.submit(r)
+    online = []
+    if preempt_step is not None:
+        for _ in range(preempt_step):
+            eng.step()
+        for s in range(2):
+            online.append(_mkreq(cfg, Priority.ONLINE, 60, 8, 100 + s))
+            eng.on_online_arrival(online[-1])
+    eng.run()
+    return [r.output_tokens for r in reqs], [r.output_tokens for r in online], reqs
+
+
+def _tp() -> int:
+    return min(4, len(jax.devices()))
+
+
+# (arch, [(prompt_len, max_new), ...], preempt_step, engine kwargs)
+CASES = [
+    # batch of 3 pads into the 4-bucket; uniform lengths
+    ("llama-2-7b", [(40, 8)] * 3, None, {}),
+    # 5 requests draining 5..1 across decode buckets {8, 4, 2, 1}; prompts
+    # straddle the prefill length buckets (8/16/32)
+    ("llama-2-7b", [(40, 12), (24, 10), (40, 8), (10, 6), (40, 4)], None, {}),
+    # online burst mid-decode under block pressure: eviction + IC restore
+    ("llama-2-7b", [(40, 16)] * 3, 6, dict(num_device_blocks=14)),
+    # same burst landing during the prefill wave
+    ("llama-2-7b", [(40, 16)] * 3, 2, dict(num_device_blocks=14)),
+    # GQA arch (4Q/2KV heads): on a 4-way mesh the pool replicates (2 % 4)
+    # while the query heads still shard — the mixed layout must stay exact
+    ("qwen2-0.5b", [(40, 8), (20, 8)], None, {}),
+    ("qwen2-0.5b", [(40, 10), (24, 6), (40, 6), (20, 4)], 4,
+     dict(num_device_blocks=14)),
+]
+
+
+@pytest.mark.parametrize("arch,jobs,preempt_step,eng_kw", CASES)
+def test_backends_emit_identical_tokens(arch, jobs, preempt_step, eng_kw):
+    out_c, on_c, _ = _run(arch, "contiguous", jobs, preempt_step,
+                          eng_kw=eng_kw)
+    out_p, on_p, reqs_p = _run(arch, "paged", jobs, preempt_step,
+                               eng_kw=eng_kw)
+    out_s, on_s, reqs_s = _run(arch, "paged", jobs, preempt_step,
+                               mesh=make_serving_mesh(_tp()), eng_kw=eng_kw)
+    assert [len(o) for o in out_p] == [g for _, g in jobs]
+    assert out_p == out_c, "paged backend diverged from contiguous"
+    assert out_s == out_p, "sharded paged backend diverged from single-device"
+    assert on_s == on_p == on_c, "online request tokens diverged"
+    if preempt_step is not None:
+        # the scenario must actually exercise preempt/resume, identically
+        # in both paged legs (the block manager is mesh-oblivious)
+        npre = sum(r.num_preemptions for r in reqs_p)
+        assert npre > 0, "preemption scenario did not preempt"
+        assert sum(r.num_preemptions for r in reqs_s) == npre
+
+
+def test_sharded_pool_is_actually_sharded():
+    """With a dividing mesh, the MHA pool must shard its KV-head axis (the
+    memory win tensor parallelism exists for); otherwise (1 device, or an
+    odd virtual-device count that doesn't divide Hkv) the mesh leg must
+    still run with the deliberate replication fallback."""
+    cfg, params = _model("llama-2-7b")
+    tp = _tp()
+    eng = RealEngine(
+        cfg, params,
+        eng_cfg=RealEngineConfig(backend="paged", mesh=make_serving_mesh(tp)),
+    )
+    spec = eng.pools["0"]["k"].sharding.spec
+    if tp > 1 and cfg.num_kv_heads % tp == 0:
+        assert spec[3] == "model", spec
+        shard = next(iter(eng.pools["0"]["k"].addressable_shards))
+        assert shard.data.shape[3] == cfg.num_kv_heads // tp
+    else:
+        assert all(s is None for s in spec)
+
+
+def test_mesh_requires_paged_backend():
+    cfg, params = _model("llama-2-7b")
+    with pytest.raises(ValueError):
+        RealEngine(
+            cfg, params,
+            eng_cfg=RealEngineConfig(
+                backend="contiguous", mesh=make_serving_mesh(1)
+            ),
+        )
+
+
+def test_sharded_calibration_runs():
+    """calibrate() on a mesh: probes replicate, timings cover the sharded
+    dispatches, and the fitted profile installs as the scheduler's latency
+    model (DESIGN.md §11 — calibration on a mesh)."""
+    from repro.core.profiler import BatchShape, CalibrationGrid
+
+    cfg, params = _model("llama-2-7b")
+    eng = RealEngine(
+        cfg, params,
+        eng_cfg=RealEngineConfig(
+            backend="paged", mesh=make_serving_mesh(_tp())
+        ),
+    )
+    prof = eng.calibrate(
+        CalibrationGrid(
+            chunk_sizes=(8,), decode_buckets=(1, 2), ctx_fractions=(0.25,),
+            repeats=1, swap_block_counts=(1,),
+        )
+    )
+    assert eng.sched.model is prof
+    t = prof.iter_time(BatchShape(decode_tokens=2, decode_ctx=64, num_seqs=2))
+    assert t > 0.0

@@ -84,6 +84,7 @@ def test_paged_attention_matches_ref(case):
     assert float(jnp.max(jnp.abs(out - want))) < 2e-5
 
 
+@pytest.mark.slow  # the parametrized PAGED_CASES (fast) pin the kernel
 @settings(max_examples=10, deadline=None)
 @given(
     b=st.integers(1, 3),

@@ -44,6 +44,7 @@ def _roundtrip(cfg: ModelConfig, T=24, P=16, B=2, tol=2e-4):
     assert max(errs) < tol, f"{cfg.name}: {max(errs)}"
 
 
+@pytest.mark.slow  # ~3 min across archs; serving tests cover the hot archs
 @pytest.mark.parametrize(
     "arch",
     ["llama-2-7b", "qwen2-0.5b", "mixtral-8x22b", "olmoe-1b-7b",
@@ -70,6 +71,7 @@ def test_chunked_prefill_equals_monolithic():
     assert err < 2e-4
 
 
+@pytest.mark.slow
 def test_sliding_window_ring_cache_decode():
     """Decoding past the window with the ring cache must equal dense
     attention with the sliding-window mask."""
@@ -131,6 +133,7 @@ def test_mamba_state_carry_across_chunks():
     assert float(jnp.max(jnp.abs(st2.ssm - st_once.ssm))) < 5e-4
 
 
+@pytest.mark.slow
 @settings(max_examples=15, deadline=None)
 @given(
     tq=st.integers(2, 130),

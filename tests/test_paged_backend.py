@@ -128,9 +128,11 @@ def test_scatter_drops_writes_through_padding():
 
 
 def test_max_model_len_not_multiple_of_block_size():
-    """Table width must cover ceil(max_model_len / block_size) blocks."""
-    _, ref, _ = _run("paged")
-    eng, out, _ = _run("paged", eng_kw=dict(max_model_len=100))
+    """Table width must cover ceil(max_model_len / block_size) blocks.
+    (8-token gens: the 40+8 = 48-token sequences span 3 blocks, plenty to
+    catch a floored width, at a fraction of the default-config runtime.)"""
+    _, ref, _ = _run("paged", gens=(8, 8, 8))
+    eng, out, _ = _run("paged", gens=(8, 8, 8), eng_kw=dict(max_model_len=100))
     assert eng._table_width == 7  # ceil(100/16), not floor
     assert out == ref
 
@@ -166,12 +168,14 @@ def test_paged_attention_ref_softcap():
 # ------------------------------------------------------------ engine parity
 
 
+@pytest.mark.slow  # test_backend_differential covers this with smaller gens
 def test_paged_matches_contiguous_uninterrupted():
     _, out_paged, _ = _run("paged")
     _, out_contig, _ = _run("contiguous")
     assert out_paged == out_contig
 
 
+@pytest.mark.slow  # test_backend_differential covers preempt+restore fast
 def test_paged_token_identity_under_forced_preemption():
     """The acceptance property: forced preemption + incremental-checkpoint
     restore on the shared pool emits byte-identical greedy tokens."""
@@ -189,6 +193,7 @@ def test_paged_token_identity_under_forced_preemption():
     assert not hasattr(eng, "caches")
 
 
+@pytest.mark.slow
 def test_paged_token_identity_under_swap_preemption():
     """Blocking swap-out preemption (PREEMPTSCHEDULING ablation) moves whole
     physical blocks — including the partial tail — through the host store."""
@@ -221,3 +226,38 @@ def test_decode_recompiles_bounded_by_buckets():
     assert [len(o) for o in outs] == list(gens)
     buckets = {RealEngine._decode_bucket(n) for n in range(1, len(gens) + 1)}
     assert 0 < eng.decode_trace_count <= len(buckets) < len(gens)
+
+
+def test_retrace_regression_guard_mixed_onoff_drain():
+    """Regression guard for the §9 bounded-recompile invariant: a fixed
+    draining mixed ON/OFF workload (5 offline requests with staggered gens
+    and mixed prompt-length buckets, plus a 3-request online burst) must
+    keep jit retraces at the documented bucket-bound values —
+    3 decode traces and 3 prefill traces on this trace today, and never
+    more than the bucket-count ceilings (decode: |{1,2,4,8}| = 4; prefill:
+    batch buckets {1,2,4,8} × length buckets {8,16,32} = 12).  Scheduling
+    is wall-clock-independent with ``slo_aware=False``, so the counts are
+    deterministic; a future dispatch change that reintroduces per-shape
+    recompiles fails this loudly instead of silently regressing serving.
+    """
+    eng = RealEngine(
+        CFG, PARAMS,
+        eng_cfg=RealEngineConfig(backend="paged", enable_safepoints=False),
+    )
+    gens = (4, 6, 8, 10, 12)
+    plens = (40, 24, 40, 10, 40)
+    for s, (p, g) in enumerate(zip(plens, gens)):
+        eng.submit(mkreq(Priority.OFFLINE, p, g, s))
+    for _ in range(4):
+        eng.step()
+    for s in range(3):
+        eng.on_online_arrival(mkreq(Priority.ONLINE, 60, 8, 100 + s))
+    eng.run()
+    assert eng.decode_trace_count == 3, (
+        f"decode retraces changed: {eng.decode_trace_count} (was 3); "
+        "did a dispatch change break batch bucketing?"
+    )
+    assert eng.prefill_trace_count == 3, (
+        f"prefill retraces changed: {eng.prefill_trace_count} (was 3); "
+        "did a dispatch change break (batch x length) bucketing?"
+    )

@@ -88,6 +88,7 @@ def test_token_identity_without_checkpointing():
     assert [r.output_tokens for r in reqs] == REF
 
 
+@pytest.mark.slow  # the differential harness asserts the same property fast
 def test_token_identity_after_safepoint_abort():
     eng = RealEngine(CFG, PARAMS)
     reqs = [mkreq(Priority.OFFLINE, 40, 24, s) for s in range(3)]
@@ -101,6 +102,7 @@ def test_token_identity_after_safepoint_abort():
     assert [r.output_tokens for r in reqs] == REF
 
 
+@pytest.mark.slow
 def test_chunk_size_does_not_change_tokens():
     outs = []
     for chunk in (8, 16, 64):

@@ -54,6 +54,7 @@ def mkengine(**eng_kw):
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.slow  # wall-clock system test; the bench exercises it too
 def test_online_arrival_aborts_offline_batch_at_safepoint():
     ref_eng = mkengine()
     ref = [mkreq(Priority.OFFLINE, 24, 16, s) for s in range(3)]
