@@ -2,7 +2,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test test-all test-sharded bench bench-wallclock bench-sharded docs-check
+.PHONY: test test-all test-sharded bench bench-fused bench-wallclock bench-sharded docs-check
 
 # fast default: slow system/wallclock/numerics tests excluded (marker
 # `slow`, registered in pytest.ini); `make test-all` is the escape hatch
@@ -20,6 +20,11 @@ test-sharded:
 
 bench:
 	python -m benchmarks.paged_decode_bench
+
+# fused ragged dispatch vs split per-family dispatches (DESIGN.md §12);
+# refreshes the in-repo perf trajectory file BENCH_fused_batch.json
+bench-fused:
+	python -m benchmarks.fused_batch_bench
 
 # real-execution co-serving on the wall clock (DESIGN.md §10)
 bench-wallclock:

@@ -93,8 +93,10 @@ def main() -> None:
         cfg,
         params,
         sched_cfg=sched_cfg,
-        # max_prefill_batch=4 splits an 8-chunk wave into >=2 dispatches, so
-        # every prefill wave exposes at least one safepoint boundary
+        # the fused path (DESIGN.md §12) safepoints between the 4 K-layer
+        # segment dispatches of EVERY pure-offline iteration — prefill
+        # waves included; max_prefill_batch=4 keeps the split-path twin
+        # (fused_batch=False) exposing >=1 prefill-group boundary too
         eng_cfg=RealEngineConfig(
             max_model_len=128, num_device_blocks=256, block_size=16,
             max_prefill_batch=4, mesh=mesh,

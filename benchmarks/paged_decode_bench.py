@@ -72,7 +72,11 @@ def main() -> list:
             row(
                 f"drain_{backend}",
                 1e6 * dt / max(1, eng.steps),
-                f"decode_retraces={eng.decode_trace_count}",
+                # the paged leg serves the fused ragged path (§12), so its
+                # retraces are fused-segment programs; contiguous keeps the
+                # decode-program count
+                f"decode_retraces={eng.decode_trace_count};"
+                f"fused_retraces={getattr(eng, 'fused_trace_count', 0)}",
             )
         )
     # -- preempt/resume cost ----------------------------------------------

@@ -93,6 +93,7 @@ def main() -> list:
         out.append(
             row(
                 f"tp{tp}_drain", us,
+                f"fused_retraces={eng.fused_trace_count};"
                 f"decode_retraces={eng.decode_trace_count};"
                 f"prefill_retraces={eng.prefill_trace_count}",
             )

@@ -19,6 +19,22 @@ from .profiler import BatchShape, LatencyModel
 from .slo import SLO
 
 
+def pow2_bucket(n: int, floor: int = 1) -> int:
+    """Smallest power of two >= max(n, floor).
+
+    THE shape-bucketing primitive (DESIGN.md §9/§12): every jitted serving
+    entry point pads its variable dimension to one of these buckets so jit
+    retraces are bounded by the bucket count instead of workload variety —
+    decode batch sizes (floor 1), prefill chunk lengths (floor 8),
+    checkpoint/restore block-id lists (floor 1), and the fused ragged
+    token batch (token count, sequence count and max query length, all
+    floor 1)."""
+    b = max(1, floor)
+    while b < n:
+        b *= 2
+    return b
+
+
 @dataclass(frozen=True)
 class TokenBudget:
     max_total_tokens: int  # hard cap for this iteration

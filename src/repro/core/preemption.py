@@ -4,11 +4,14 @@ On GPU the paper instruments the model with an in-graph safepoint every K
 layers (NCCL-broadcast flag + abort).  TPUs execute one program per
 dispatch, so the natural safepoint is the *dispatch boundary*: the worker
 executes the forward pass as a sequence of jitted K-layer segments
-(``transformer.run_segment`` / ``run_segment_paged_at``) and checks a
-host-side flag between dispatches (JAX async dispatch keeps the device
-busy during the check); on the paged backend, batched-prefill group
-boundaries are safepoints too (``RealEngine._prefill_paged_batched``,
-DESIGN.md §9).  The wall-clock runtime additionally drains API-thread
+(``transformer.run_tokens_paged_at`` on the fused paged path, where every
+pure-offline iteration — prefill chunks and decodes fused into one ragged
+batch — is segment-dispatched, DESIGN.md §12; ``transformer.run_segment``
+/ ``run_segment_paged_at`` on the split paths) and checks a host-side
+flag between dispatches (JAX async dispatch keeps the device busy during
+the check); on the split paged path, batched-prefill group boundaries are
+safepoints too (``RealEngine._prefill_paged_batched``, DESIGN.md §9).
+The wall-clock runtime additionally drains API-thread
 arrivals at every check via the engine's ``arrival_poll`` hook
 (DESIGN.md §10).  Semantics match the paper exactly:
 

@@ -298,6 +298,14 @@ class CalibrationGrid:
     prefill_batches: Tuple[int, ...] = (1,)  # batched-prefill group sizes
     decode_buckets: Tuple[int, ...] = (1, 2, 4, 8)
     ctx_fractions: Tuple[float, ...] = (0.25, 0.75)  # of max context
+    # Fused mixed-batch samples (DESIGN.md §12), keyed on the fused path's
+    # own trace key: (token bucket, max KV depth).  Each point times one
+    # fused ragged dispatch of `t` total tokens — a prefill chunk plus
+    # decode rows at `ctx_fraction * max_ctx` context — so
+    # ``MeasuredProfiler`` prices mixed batches from DIRECT measurements
+    # instead of extrapolating pure-prefill + pure-decode fits.  Empty on
+    # split-path engines (the split dispatches never mix families).
+    token_buckets: Tuple[int, ...] = ()
     repeats: int = 3  # timed runs per shape (min is taken)
     warmup: int = 1  # untimed runs per shape (absorbs compilation)
     # checkpoint-extract timing; power-of-two counts double as warm-up of
@@ -311,12 +319,19 @@ def calibrate(
     max_ctx: int,
     grid: CalibrationGrid = CalibrationGrid(),
     swap_timer: Optional[Callable[[int], Tuple[int, float]]] = None,
+    fused_timer: Optional[
+        Callable[[int, int], Tuple[BatchShape, float]]
+    ] = None,
 ) -> MeasuredProfiler:
     """Fit a ``MeasuredProfiler`` from on-device measurements.
 
     ``prefill_timer(batch, chunk)`` and ``decode_timer(batch, ctx)`` return
     wall seconds for one iteration at that shape; ``swap_timer(n_blocks)``
-    returns ``(bytes_moved, seconds)`` for a device→host checkpoint copy.
+    returns ``(bytes_moved, seconds)`` for a device→host checkpoint copy;
+    ``fused_timer(tokens, kv_len)`` (fused engines, DESIGN.md §12) times
+    one mixed ragged dispatch at that token bucket and context depth and
+    returns its exact ``BatchShape`` with the measurement, so mixed-batch
+    pricing comes from the fused dispatches the engine actually serves.
     The executor callables are supplied by the engine (``RealEngine.
     calibrate``) so this module stays free of serving-layer imports.
 
@@ -341,6 +356,12 @@ def calibrate(
             ctx = max(1, min(int(f * max_ctx), max_ctx - 1))
             shape = BatchShape(decode_tokens=b, decode_ctx=b * ctx, num_seqs=b)
             prof.record(shape, decode_timer(b, ctx))
+    if fused_timer is not None:
+        for t in grid.token_buckets:
+            for f in grid.ctx_fractions:
+                kv = max(1, min(int(f * max_ctx), max_ctx - 1))
+                shape, secs = fused_timer(t, kv)
+                prof.record(shape, secs)
     if swap_timer is not None:
         for n in grid.swap_block_counts:
             prof.record_swap(*swap_timer(n))

@@ -18,10 +18,15 @@ from .kv_checkpoint import checkpoint_gather as _ckpt_pallas
 from .kv_checkpoint import checkpoint_scatter
 from .paged_attention import paged_attention as _paged_pallas
 from .paged_attention import paged_attention_sharded as _paged_shmap
+from .paged_attention import ragged_paged_attention as _ragged_pallas
+from .paged_attention import (
+    ragged_paged_attention_sharded as _ragged_shmap,
+)
 
 __all__ = [
     "flash_attention",
     "paged_attention",
+    "ragged_paged_attention",
     "checkpoint_gather",
     "checkpoint_scatter",
     "kernel_backend",
@@ -70,6 +75,31 @@ def paged_attention(q, k_pool, v_pool, block_tables, seq_lens, *,
         )
     return _paged_pallas(
         q, k_pool, v_pool, block_tables, seq_lens,
+        logit_softcap=logit_softcap, interpret=(be == "interpret"),
+    )
+
+
+def ragged_paged_attention(q, k_pool, v_pool, block_tables, q_positions,
+                           kv_lens, *, logit_softcap=0.0, mesh=None):
+    """Fused mixed-batch attention over the paged pool (DESIGN.md §12):
+    one dispatch serves every sequence of an iteration, prefill chunks and
+    decodes alike.  Same backend dispatch contract as ``paged_attention``:
+    Pallas (shard_mapped over KV heads on a mesh) on TPU, the
+    ``cache_ops`` jnp oracle on CPU — where GSPMD partitions the oracle
+    einsums over the already-constrained head axis."""
+    be = kernel_backend()
+    if be == "ref":
+        return ref.ragged_paged_attention_ref(
+            q, k_pool, v_pool, block_tables, q_positions, kv_lens,
+            logit_softcap=logit_softcap,
+        )
+    if mesh is not None:
+        return _ragged_shmap(
+            q, k_pool, v_pool, block_tables, q_positions, kv_lens, mesh,
+            logit_softcap=logit_softcap, interpret=(be == "interpret"),
+        )
+    return _ragged_pallas(
+        q, k_pool, v_pool, block_tables, q_positions, kv_lens,
         logit_softcap=logit_softcap, interpret=(be == "interpret"),
     )
 

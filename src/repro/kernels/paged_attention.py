@@ -138,6 +138,206 @@ def paged_attention(
     return out.reshape(b, h, d)
 
 
+def _ragged_kernel(
+    block_tables_ref,  # (S, M) scalar-prefetch (SMEM)
+    kv_lens_ref,  # (S,) scalar-prefetch (SMEM)
+    q_ref,  # (1, 1, Qmax, G, D)
+    q_pos_ref,  # (1, Qmax)
+    k_ref,  # (1, page, 1, D)
+    v_ref,  # (1, page, 1, D)
+    o_ref,  # (1, 1, Qmax, G, D)
+    acc_ref,  # (Qmax*G, D) f32
+    m_ref,  # (Qmax*G, 1) f32
+    l_ref,  # (Qmax*G, 1) f32
+    *,
+    scale: float,
+    page: int,
+    pages_per_seq: int,
+    qmax: int,
+    g: int,
+    logit_softcap: float,
+):
+    s = pl.program_id(0)
+    mi = pl.program_id(2)
+
+    @pl.when(mi == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    kv_len = kv_lens_ref[s]
+    page_start = mi * page
+
+    @pl.when(page_start < kv_len)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32).reshape(qmax * g, -1)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # (page, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        sc = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (Qmax*G, page)
+        if logit_softcap:
+            sc = jnp.tanh(sc / logit_softcap) * logit_softcap
+        tok = page_start + jax.lax.broadcasted_iota(
+            jnp.int32, (1, 1, page), 2
+        )
+        qpos = q_pos_ref[0, :].reshape(qmax, 1, 1)
+        # causal per query row (broadcast over its G grouped heads); the
+        # kv_len bound only matters for padded query rows whose garbage
+        # positions could otherwise reach junk beyond the sequence
+        keep = (tok <= qpos) & (tok < kv_len)  # (Qmax, 1, page)
+        sc = jnp.where(
+            jnp.broadcast_to(keep, (qmax, g, page)).reshape(qmax * g, page),
+            sc.reshape(qmax * g, page),
+            NEG_INF,
+        )
+
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_cur = jnp.max(sc, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(sc - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(mi == pages_per_seq - 1)
+    def _finalize():
+        l = l_ref[...]
+        safe_l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / safe_l).reshape(qmax, g, -1).astype(
+            o_ref.dtype
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "logit_softcap"))
+def ragged_paged_attention(
+    q: jnp.ndarray,  # (S, Qmax, H, D) — per-sequence padded query tokens
+    k_pool: jnp.ndarray,  # (N, page, Hkv, D)
+    v_pool: jnp.ndarray,
+    block_tables: jnp.ndarray,  # (S, M) int32, -1 padded
+    q_positions: jnp.ndarray,  # (S, Qmax) absolute position of each query
+    kv_lens: jnp.ndarray,  # (S,) valid tokens (incl. this iteration's)
+    *,
+    logit_softcap: float = 0.0,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Fused ragged paged attention: ONE dispatch covers every sequence of
+    a mixed iteration — prefill chunks (``q_len`` up to Qmax queries) and
+    decodes (``q_len = 1``) share the grid (DESIGN.md §12).
+
+    Same TPU adaptation as the decode kernel above: grid (S, Hkv, M) with
+    scalar-prefetched block tables doing the page indirection in the index
+    maps, online-softmax accumulators in VMEM scratch — the query tile is
+    just (Qmax*G, D) instead of (G, D).  Padded query slots (their
+    positions are garbage) are masked by the causal + kv_len bound and
+    their output rows are never read back.  Returns (S, Qmax, H, D).
+    """
+    s, qmax, h, d = q.shape
+    n, page, hkv, _ = k_pool.shape
+    g = h // hkv
+    m = block_tables.shape[1]
+
+    # grouped-KV-head-major, like the decode kernel: (S, Hkv, Qmax, G, D)
+    qg = q.reshape(s, qmax, hkv, g, d).transpose(0, 2, 1, 3, 4)
+    tables = jnp.maximum(block_tables, 0).astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(s, hkv, m),
+        in_specs=[
+            pl.BlockSpec(
+                (1, 1, qmax, g, d),
+                lambda s_, h_, mi, bt, kl: (s_, h_, 0, 0, 0),
+            ),
+            pl.BlockSpec((1, qmax), lambda s_, h_, mi, bt, kl: (s_, 0)),
+            pl.BlockSpec(
+                (1, page, 1, d),
+                lambda s_, h_, mi, bt, kl: (bt[s_, mi], 0, h_, 0),
+            ),
+            pl.BlockSpec(
+                (1, page, 1, d),
+                lambda s_, h_, mi, bt, kl: (bt[s_, mi], 0, h_, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, qmax, g, d), lambda s_, h_, mi, bt, kl: (s_, h_, 0, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((qmax * g, d), jnp.float32),
+            pltpu.VMEM((qmax * g, 1), jnp.float32),
+            pltpu.VMEM((qmax * g, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _ragged_kernel, scale=d**-0.5, page=page, pages_per_seq=m,
+            qmax=qmax, g=g, logit_softcap=logit_softcap,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((s, hkv, qmax, g, d), q.dtype),
+        interpret=interpret,
+    )(
+        tables,
+        kv_lens.astype(jnp.int32),
+        qg,
+        q_positions.astype(jnp.int32),
+        k_pool,
+        v_pool,
+    )
+    return out.transpose(0, 2, 1, 3, 4).reshape(s, qmax, h, d)
+
+
+def ragged_paged_attention_sharded(
+    q: jnp.ndarray,  # (S, Qmax, H, D)
+    k_pool: jnp.ndarray,  # (N, page, Hkv, D)
+    v_pool: jnp.ndarray,
+    block_tables: jnp.ndarray,  # (S, M)
+    q_positions: jnp.ndarray,  # (S, Qmax)
+    kv_lens: jnp.ndarray,  # (S,)
+    mesh,
+    *,
+    logit_softcap: float = 0.0,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Tensor-parallel fused ragged attention: shard_maps the ragged kernel
+    over the mesh's ``model`` axis exactly like ``paged_attention_sharded``
+    — each chip runs the grid on its local Hkv/tp heads, addressing
+    metadata replicates, GQA groups stay local because the query-head axis
+    is grouped KV-head-major (DESIGN.md §11/§12)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    msize = mesh.shape["model"] if "model" in mesh.axis_names else 1
+    h, hkv = q.shape[2], k_pool.shape[2]
+    if msize <= 1 or h % msize or hkv % msize:
+        return ragged_paged_attention(
+            q, k_pool, v_pool, block_tables, q_positions, kv_lens,
+            logit_softcap=logit_softcap, interpret=interpret,
+        )
+    fn = functools.partial(
+        ragged_paged_attention, logit_softcap=logit_softcap,
+        interpret=interpret,
+    )
+    return shard_map(
+        fn,
+        mesh,
+        in_specs=(
+            P(None, None, "model", None),
+            P(None, None, "model", None),
+            P(None, None, "model", None),
+            P(None, None),
+            P(None, None),
+            P(None),
+        ),
+        out_specs=P(None, None, "model", None),
+        check_rep=False,
+    )(q, k_pool, v_pool, block_tables, q_positions, kv_lens)
+
+
 def paged_attention_sharded(
     q: jnp.ndarray,  # (B, H, D)
     k_pool: jnp.ndarray,  # (N, page, Hkv, D)

@@ -33,8 +33,9 @@ def flash_attention_ref(
     return out.reshape(b, tq, h, d).astype(q.dtype)
 
 
-# Paged decode attention oracle lives next to the physical layout helpers.
+# Paged attention oracles live next to the physical layout helpers.
 from repro.kvcache.cache_ops import (  # noqa: E402,F401
     checkpoint_gather_ref,
     paged_attention_ref,
+    ragged_paged_attention_ref,
 )

@@ -64,6 +64,29 @@ def write_paged_chunk(
     return k_pool, v_pool
 
 
+def write_ragged(
+    k_pool: jnp.ndarray,
+    v_pool: jnp.ndarray,
+    k_new: jnp.ndarray,  # (T, Hkv, D) — flattened ragged token batch
+    v_new: jnp.ndarray,
+    dst_rows: jnp.ndarray,  # (T,) physical pool row per token
+    dst_offsets: jnp.ndarray,  # (T,) slot within the block
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Scatter a flattened ragged token batch into the pool (DESIGN.md §12).
+
+    The engine resolves each token's (block row, slot) on the host when it
+    builds the ragged batch — the device sees a flat destination list, so
+    prefill-chunk and decode tokens of a fused iteration land in ONE
+    scatter with no per-sequence table lookup.  Padded tokens carry the
+    scratch row; negative rows (not produced by the engine, but tolerated
+    for symmetry with ``write_paged_chunk``) drop the write.
+    """
+    rows = jnp.where(dst_rows >= 0, dst_rows, k_pool.shape[0])
+    k_pool = k_pool.at[rows, dst_offsets].set(k_new, mode="drop")
+    v_pool = v_pool.at[rows, dst_offsets].set(v_new, mode="drop")
+    return k_pool, v_pool
+
+
 def extract_block(pool: jnp.ndarray, block_id) -> jnp.ndarray:
     """O(block) copy out of the pool by *physical* id: (bs, Hkv, D).
 
@@ -122,6 +145,52 @@ def paged_attention_ref(
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhgt,bthd->bhgd", probs, v.astype(jnp.float32))
     return out.reshape(b, h, d).astype(q.dtype)
+
+
+def ragged_paged_attention_ref(
+    q: jnp.ndarray,  # (S, Qmax, H, D) — per-sequence padded query tokens
+    k_pool: jnp.ndarray,  # (num_blocks, bs, Hkv, D)
+    v_pool: jnp.ndarray,
+    block_tables: jnp.ndarray,  # (S, M)
+    q_positions: jnp.ndarray,  # (S, Qmax) absolute position of each query
+    kv_lens: jnp.ndarray,  # (S,) valid context incl. this iteration's tokens
+    logit_softcap: float = 0.0,
+) -> jnp.ndarray:
+    """Oracle for the fused ragged paged-attention dispatch (DESIGN.md §12).
+
+    One call covers every sequence of a mixed iteration: prefill chunks
+    occupy ``q_len`` query slots, decode tokens are the ``q_len = 1``
+    degenerate case.  Padded query slots (beyond a sequence's ``q_len``)
+    compute garbage that the caller's unpad gather never reads.
+
+    Numerics are identical to the split paths: block tables gather KV in
+    logical position order over the same ``M * bs`` context width, and the
+    causal mask ``kv_pos <= q_pos`` (with ``kv_pos < kv_len`` bounding
+    padded rows) reduces to the decode path's validity mask at
+    ``q_len = 1``.  Returns (S, Qmax, H, D).
+    """
+    s, tq, h, d = q.shape
+    bs = k_pool.shape[1]
+    m = block_tables.shape[1]
+    max_ctx = m * bs
+    k = gather_paged(k_pool, block_tables, max_ctx)  # (S, T, Hkv, D)
+    v = gather_paged(v_pool, block_tables, max_ctx)
+    hkv = k.shape[2]
+    g = h // hkv
+    qg = q.reshape(s, tq, hkv, g, d)
+    scores = jnp.einsum(
+        "bthgd,bshd->bhgts", qg.astype(jnp.float32), k.astype(jnp.float32)
+    ) * (d**-0.5)
+    if logit_softcap:
+        scores = jnp.tanh(scores / logit_softcap) * logit_softcap
+    kv_pos = jnp.arange(max_ctx, dtype=jnp.int32)
+    mask = (kv_pos[None, None, :] <= q_positions[:, :, None]) & (
+        kv_pos[None, None, :] < kv_lens[:, None, None]
+    )  # (S, Qmax, T)
+    scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgts,bshd->bthgd", probs, v.astype(jnp.float32))
+    return out.reshape(s, tq, h, d).astype(q.dtype)
 
 
 def checkpoint_gather_ref(

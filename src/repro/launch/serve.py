@@ -79,7 +79,14 @@ def run_real(args) -> None:
     cfg = get_config(args.arch).reduced()
     params = tf.init_params(cfg, jax.random.PRNGKey(args.seed))
     eng = RealEngine(
-        cfg, params, eng_cfg=RealEngineConfig(mesh=_serving_mesh(args.tp))
+        cfg, params,
+        eng_cfg=RealEngineConfig(
+            # size the KV capacity to the requested lengths, or admission
+            # control rejects the default workload (longest job below is
+            # prompt_len // 4 prompt tokens + max_new generated)
+            max_model_len=max(256, args.prompt_len // 4 + args.max_new),
+            mesh=_serving_mesh(args.tp),
+        ),
     )
     fe = Frontend(eng)
     rng = np.random.default_rng(args.seed)

@@ -15,7 +15,7 @@ roofline byte counts are identical between contiguous and paged layouts).
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -546,6 +546,83 @@ def paged_decode_attention(
     )
     out = replicate_on_mesh(out, mesh)
     return out_proj(p, out[:, None]), {"k": k_pool, "v": v_pool}
+
+
+# ---------------------------------------------------------------------------
+# Fused ragged paged attention (one dispatch per mixed iteration, §12)
+# ---------------------------------------------------------------------------
+
+
+class RaggedMeta(NamedTuple):
+    """Addressing metadata for one fused ragged token batch (DESIGN.md §12).
+
+    The engine lowers an ``IterationPlan`` to a flattened token axis of
+    length T (bucket-padded) over S sequences (bucket-padded, each with
+    ``q_len`` <= Qmax queries) and resolves all indirection on the host —
+    the device programs see only flat gather/scatter index vectors:
+
+      dst_row/dst_off  (T,)       KV-pool scatter target per new token
+                                  (padded tokens -> the scratch row)
+      qpad             (S, Qmax)  flat token index per padded query slot
+                                  (clamped; garbage slots are masked/unread)
+      q_pos            (S, Qmax)  absolute position per padded query slot
+      kv_lens          (S,)       valid context incl. this iteration
+      unpad_seq/unpad_j (T,)      (sequence, slot) of each flat token, for
+                                  gathering attention output back to flat
+    """
+
+    dst_row: jnp.ndarray
+    dst_off: jnp.ndarray
+    qpad: jnp.ndarray
+    q_pos: jnp.ndarray
+    kv_lens: jnp.ndarray
+    unpad_seq: jnp.ndarray
+    unpad_j: jnp.ndarray
+
+
+def paged_ragged_attention(
+    cfg: ModelConfig,
+    p: Params,
+    x: jnp.ndarray,  # (1, T, d_model) — flattened ragged token batch
+    pool: Dict[str, jnp.ndarray],
+    block_tables: jnp.ndarray,  # (S, M)
+    positions: jnp.ndarray,  # (1, T) absolute position of each flat token
+    meta: RaggedMeta,
+    mesh=None,  # tensor-parallel serving mesh (DESIGN.md §11)
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Fused mixed-batch attention against the shared paged pool.
+
+    Projects/ropes the whole flattened batch at once, scatters every new
+    token's KV into the pool in ONE fused write (prefill chunks and decode
+    tokens alike — ``cache_ops.write_ragged``), then dispatches the single
+    ragged paged-attention kernel: Pallas on TPU (shard_mapped over KV
+    heads on a mesh), the ``cache_ops`` jnp oracle on CPU.  The padded
+    (S, Qmax) query layout exists only inside the attention op; the output
+    is gathered straight back to the flat token axis.
+    """
+    from repro.kernels import ops as kernel_ops
+    from repro.kvcache.cache_ops import write_ragged
+
+    mesh = _kv_shard_mesh(pool, mesh)
+    q, k, v = project_qkv(cfg, p, x)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard_paged_heads(q, mesh, 2)
+    k = shard_paged_heads(k, mesh, 2)
+    v = shard_paged_heads(v, mesh, 2)
+    k_pool, v_pool = write_ragged(
+        pool["k"], pool["v"], k[0], v[0], meta.dst_row, meta.dst_off
+    )
+    k_pool = shard_paged_heads(k_pool, mesh, 2)
+    v_pool = shard_paged_heads(v_pool, mesh, 2)
+    q_pad = jnp.take(q[0], meta.qpad, axis=0)  # (S, Qmax, H, D)
+    out = kernel_ops.ragged_paged_attention(
+        q_pad, k_pool, v_pool, block_tables, meta.q_pos, meta.kv_lens,
+        logit_softcap=cfg.logit_softcap, mesh=mesh,
+    )
+    out = replicate_on_mesh(out, mesh)
+    flat = out[meta.unpad_seq, meta.unpad_j][None]  # (1, T, H, D)
+    return out_proj(p, flat), {"k": k_pool, "v": v_pool}
 
 
 # ---------------------------------------------------------------------------

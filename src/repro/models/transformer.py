@@ -38,6 +38,7 @@ from .config import (
 )
 from .layers import (
     KVCache,
+    RaggedMeta,
     cached_attention,
     cross_attention,
     dense_attention,
@@ -46,6 +47,7 @@ from .layers import (
     mlp,
     paged_decode_attention,
     paged_prefill_attention,
+    paged_ragged_attention,
     project_cross_kv,
     rmsnorm,
 )
@@ -247,6 +249,7 @@ def _apply_layer(
     img_x: Optional[jnp.ndarray],
     capacity_factor: float,
     block_tables: Optional[jnp.ndarray] = None,  # paged physical layout
+    ragged: Optional[RaggedMeta] = None,  # fused ragged token batch (§12)
     mesh=None,  # tensor-parallel serving mesh (paged path only, §11)
 ) -> Tuple[jnp.ndarray, Optional[PyTree], jnp.ndarray]:
     """Returns (x_out, new_cache, aux_loss).
@@ -256,6 +259,8 @@ def _apply_layer(
                 prefill for the dry-run).  Caches, if given, are *emitted*.
       prefill — chunk with prior context in caches (ConServe chunked prefill).
       decode  — one token against caches.
+      ragged  — fused mixed token batch on the paged layout (``ragged`` set):
+                prefill chunks and decode tokens share one flattened axis.
     """
     from repro.distributed.act_sharding import (
         constrain_block_input,
@@ -283,15 +288,21 @@ def _apply_layer(
 
     if spec.mixer == MIXER_ATTN:
         if block_tables is not None:  # shared paged pool (serving hot path)
-            attn_fn = (
-                paged_decode_attention
-                if mode == "decode"
-                else paged_prefill_attention
-            )
-            mix, new_cache = attn_fn(
-                cfg, lp["mixer"], h, cache, block_tables, positions,
-                mesh=mesh,
-            )
+            if ragged is not None:  # fused mixed batch (one dispatch, §12)
+                mix, new_cache = paged_ragged_attention(
+                    cfg, lp["mixer"], h, cache, block_tables, positions,
+                    ragged, mesh=mesh,
+                )
+            else:
+                attn_fn = (
+                    paged_decode_attention
+                    if mode == "decode"
+                    else paged_prefill_attention
+                )
+                mix, new_cache = attn_fn(
+                    cfg, lp["mixer"], h, cache, block_tables, positions,
+                    mesh=mesh,
+                )
         elif mode == "full":
             mix = dense_attention(cfg, lp["mixer"], h, positions)
             new_cache = cache
@@ -369,6 +380,7 @@ def run_periods(
     capacity_factor: float = 1.25,
     remat: bool = False,
     block_tables: Optional[jnp.ndarray] = None,  # paged: caches are pools
+    ragged: Optional[RaggedMeta] = None,  # fused ragged token batch (§12)
     mesh=None,  # tensor-parallel serving mesh (paged path only, §11)
 ) -> Tuple[jnp.ndarray, Optional[Dict[str, PyTree]], jnp.ndarray]:
     """Scan the pattern periods. Returns (x, new_caches, total_aux)."""
@@ -395,6 +407,7 @@ def run_periods(
                 img_x=img_x,
                 capacity_factor=capacity_factor,
                 block_tables=block_tables,
+                ragged=ragged,
                 mesh=mesh,
             )
             if cache_in is not None:
@@ -685,6 +698,109 @@ def run_segment_paged_at(
         ps_new,
     )
     return x, constrain_paged_pools(merged, mesh)
+
+
+# ---------------------------------------------------------------------------
+# Fused ragged token-batch entry points (DESIGN.md §12)
+#
+# These supersede prefill_chunk_paged / decode_step_paged on the serving hot
+# path: the scheduler's whole IterationPlan — prefill chunks AND decode
+# tokens, online and offline alike — lowers to one flattened ragged batch
+# and executes as a single dispatch per K-layer segment.  The split entry
+# points above remain the differential oracle (RealEngineConfig.fused_batch
+# = False).
+# ---------------------------------------------------------------------------
+
+
+def run_tokens_paged(
+    cfg: ModelConfig,
+    params: PyTree,
+    tokens: jnp.ndarray,  # (T,) flattened ragged token batch (bucket-padded)
+    pools: Dict[str, PyTree],
+    block_tables: jnp.ndarray,  # (S, M) physical block ids per sequence
+    positions: jnp.ndarray,  # (T,) absolute position of each flat token
+    meta: RaggedMeta,
+    logit_index: jnp.ndarray,  # (S,) flat index of each sequence's last token
+    mesh=None,  # tensor-parallel serving mesh (DESIGN.md §11)
+) -> Tuple[jnp.ndarray, Dict[str, PyTree]]:
+    """Whole-stack fused mixed-batch forward. Returns ((S, V) logits, pools).
+
+    One call executes an entire iteration plan: each sequence contributes
+    ``q_len`` consecutive flat tokens (a prefill chunk, or exactly one
+    decode token), every layer scatters the new KV into the shared pool
+    and runs the single ragged paged-attention op, and the logits of each
+    sequence's last real token come back for sampling."""
+    pools = constrain_paged_pools(pools, mesh)
+    x = embed(cfg, params, tokens[None])
+    x, pools, _ = run_periods(
+        cfg,
+        params["layers"],
+        x,
+        mode="ragged",
+        positions=positions[None],
+        caches=pools,
+        block_tables=block_tables,
+        ragged=meta,
+        capacity_factor=-1.0,
+        mesh=mesh,
+    )
+    pools = constrain_paged_pools(pools, mesh)
+    return ragged_lm_head(cfg, params, x, logit_index), pools
+
+
+def run_tokens_paged_at(
+    cfg: ModelConfig,
+    params: PyTree,
+    seg_periods: int,  # periods in this segment (STATIC under jit)
+    lo: jnp.ndarray,  # starting period (traced)
+    x: jnp.ndarray,  # (1, T, d) flattened ragged activations
+    pools: Dict[str, PyTree],
+    block_tables: jnp.ndarray,  # (S, M)
+    positions: jnp.ndarray,  # (1, T)
+    meta: RaggedMeta,
+    mesh=None,  # tensor-parallel serving mesh (DESIGN.md §11)
+) -> Tuple[jnp.ndarray, Dict[str, PyTree]]:
+    """One K-layer segment of the fused ragged batch, with a *traced*
+    starting period — the fused twin of ``run_segment_paged_at``: all
+    equal-length segments share one compiled program, so the engine's
+    safepoint-instrumented fused iteration costs at most two compilations
+    per (token, sequence, query-length) bucket triple.  Pool writes of an
+    aborted iteration land at not-yet-committed positions and are
+    rewritten verbatim on re-execution (§12 abort soundness)."""
+    pools = constrain_paged_pools(pools, mesh)
+    sl = lambda a: jax.lax.dynamic_slice_in_dim(a, lo, seg_periods, axis=0)
+    lp = jax.tree.map(sl, params["layers"])
+    ps = jax.tree.map(sl, pools)
+    x, ps_new, _ = run_periods(
+        cfg,
+        lp,
+        x,
+        mode="ragged",
+        positions=positions,
+        caches=ps,
+        block_tables=block_tables,
+        ragged=meta,
+        capacity_factor=-1.0,
+        mesh=mesh,
+    )
+    merged = jax.tree.map(
+        lambda a, u: jax.lax.dynamic_update_slice_in_dim(a, u, lo, axis=0),
+        pools,
+        ps_new,
+    )
+    return x, constrain_paged_pools(merged, mesh)
+
+
+def ragged_lm_head(
+    cfg: ModelConfig,
+    params: PyTree,
+    x: jnp.ndarray,  # (1, T, d) flattened ragged activations
+    logit_index: jnp.ndarray,  # (S,)
+) -> jnp.ndarray:
+    """Logits of each sequence's last real token: gather S rows out of the
+    flat axis first, so the LM head prices O(S·V), not O(T·V)."""
+    xl = jnp.take(x[0], logit_index, axis=0)[:, None, :]
+    return lm_head(cfg, params, xl)[:, 0, :]
 
 
 # ---------------------------------------------------------------------------

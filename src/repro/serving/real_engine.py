@@ -15,14 +15,26 @@ Implementation notes:
   to the Pallas ``paged_attention`` kernel on TPU and the ``cache_ops`` jnp
   oracle on CPU.  The last pool row is a scratch block that absorbs writes
   from padded batch rows.
+* Fused mixed-batch execution (DESIGN.md §12, the default paged hot
+  path, ``RealEngineConfig.fused_batch``): the whole ``IterationPlan`` —
+  online decodes plus offline prefill chunks — lowers to ONE flattened
+  ragged token batch (``_build_ragged``) and executes as a single
+  ``run_tokens_paged_at`` dispatch per K-layer segment, each layer doing
+  one fused KV-pool scatter and one ragged paged-attention op; decode is
+  the ``q_len = 1`` degenerate case, not a separate dispatch family.
+  ``fused_batch=False`` keeps the split per-family paths below as the
+  differential oracle.
 * Every jitted entry point runs at bucketed shapes so recompilation is
-  bounded by the bucket count, not by workload variety (DESIGN.md §9):
-  decode batches pad to power-of-two buckets (``decode_trace_count``
-  counts retraces); prefill chunks are grouped by power-of-two padded
-  length and dispatched as batched ``prefill_chunk_paged`` calls capped at
-  ``max_prefill_batch`` (``prefill_trace_count``); checkpoint extract /
-  resume restore pad their block-id lists to buckets; segmented decode
-  uses a traced-start program (``run_segment_paged_at``) shared by all
+  bounded by the bucket count, not by workload variety (DESIGN.md §9;
+  one shared primitive, ``core.budget.pow2_bucket``): the fused path is
+  keyed on the (token, sequence, query-length) bucket triple
+  (``fused_trace_count``); on the split paths decode batches pad to
+  power-of-two buckets (``decode_trace_count``) and prefill chunks are
+  grouped by power-of-two padded length and dispatched as batched
+  ``prefill_chunk_paged`` calls capped at ``max_prefill_batch``
+  (``prefill_trace_count``); checkpoint extract / resume restore pad
+  their block-id lists to buckets; segmented programs use a traced start
+  (``run_segment_paged_at`` / ``run_tokens_paged_at``) shared by all
   equal-length segments.
 * Incremental checkpointing copies completed blocks out of the pool by
   physical id into a ``HostKVStore`` (O(block), no pytree slicing); restore
@@ -39,10 +51,12 @@ Implementation notes:
   sharded dim.  Sharded serving therefore emits bitwise-identical greedy
   tokens (asserted by ``tests/test_backend_differential.py``); a 1-device
   mesh is behaviorally identical to ``mesh=None``.
-* Safepoints: every dispatch boundary of a pure-offline iteration — between
-  K-layer decode segments (``core.preemption.SegmentedExecution``) and
-  between batched-prefill groups (paged backend only; prefill KV writes are
-  idempotent there) — checks the preemption flag.  The optional
+* Safepoints: every dispatch boundary of a pure-offline iteration —
+  between the fused path's K-layer segments (prefill and decode tokens
+  alike; KV writes are positional and idempotent on the paged layout),
+  or on the split paths between decode segments
+  (``core.preemption.SegmentedExecution``) and batched-prefill groups
+  — checks the preemption flag.  The optional
   ``arrival_poll`` hook runs at every safepoint so the wall-clock runtime
   (``serving.runtime``, DESIGN.md §10) can drain API-thread arrivals and let
   Algorithm 2 abort the batch mid-iteration.
@@ -65,6 +79,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.budget import pow2_bucket
 from repro.core.checkpoint import (
     AdaptiveCheckpointPolicy,
     Checkpointer,
@@ -73,6 +88,7 @@ from repro.core.checkpoint import (
 from repro.core.preemption import PreemptionFlag, SegmentedExecution
 from repro.core.profiler import (
     AnalyticalCostModel,
+    BatchShape,
     CalibrationGrid,
     MeasuredProfiler,
     TPU_V5E,
@@ -101,7 +117,16 @@ class RealEngineConfig:
     backend: str = "auto"
     # largest batched-prefill dispatch (a bigger prefill wave is split into
     # several dispatches, each boundary a safepoint of pure-offline plans)
+    # — split path only; the fused path has no per-dispatch batch cap
     max_prefill_batch: int = 8
+    # Fused mixed-batch execution (DESIGN.md §12): lower the whole
+    # IterationPlan — prefill chunks + decode tokens — to ONE flattened
+    # ragged token batch and execute it as a single dispatch per K-layer
+    # segment.  False falls back to the split per-family dispatches
+    # (_prefill_paged_batched then _decode_paged), kept as the
+    # differential oracle.  Paged backend only; ignored on the
+    # contiguous fallback.
+    fused_batch: bool = True
     # Tensor-parallel serving mesh (jax.sharding.Mesh with a "model" axis;
     # see launch.mesh.make_serving_mesh).  Paged backend only: the shared
     # pools shard over KV heads, everything host-side stays mesh-oblivious
@@ -185,6 +210,14 @@ class RealEngine:
         self._key = jax.random.PRNGKey(0)
         self.decode_trace_count = 0  # jit retraces of the decode entry point
         self.prefill_trace_count = 0  # jit retraces of the paged prefill
+        self.fused_trace_count = 0  # jit retraces of the fused segment
+        # Device dispatches of the jitted model programs, by entry point —
+        # the fusion bench/tests count these (embed/sample eager ops and
+        # checkpoint copies excluded).
+        self.dispatches: Dict[str, int] = {
+            "prefill": 0, "decode": 0, "segment": 0,
+            "fused_segment": 0, "fused_logits": 0,
+        }
         # Runtime hook: called between K-layer segment dispatches of a
         # pure-offline batch (i.e. at every safepoint) so the wall-clock
         # runtime can drain arrivals that landed on the API thread and run
@@ -192,6 +225,7 @@ class RealEngine:
         self.arrival_poll: Optional[Callable[[], None]] = None
         self.profile: Optional[MeasuredProfiler] = None  # set by calibrate()
 
+        self.fused = self.paged and eng_cfg.fused_batch
         if self.paged:
             # Shared physical pools + one scratch row (id num_device_blocks)
             # that absorbs writes from padded batch rows / padded table
@@ -238,6 +272,24 @@ class RealEngine:
                 ),
                 static_argnums=(0,),
                 donate_argnums=(3,),
+            )
+
+            # fused ragged token-batch programs (DESIGN.md §12): one
+            # traced-start segment shared by all equal-length segments of
+            # every (token, sequence, query-length) bucket triple, plus
+            # the S-row logits gather
+            def _fused_segment(pps, lo, x, pools, tables, positions, meta):
+                self.fused_trace_count += 1  # runs only while tracing
+                return tf.run_tokens_paged_at(
+                    self.cfg, self.params, pps, lo, x, pools, tables,
+                    positions, meta, mesh=self.mesh,
+                )
+
+            self._fused_segment_jit = jax.jit(
+                _fused_segment, static_argnums=(0,), donate_argnums=(3,)
+            )
+            self._fused_logits_jit = jax.jit(
+                lambda x, li: tf.ragged_lm_head(self.cfg, self.params, x, li)
             )
 
             def _restore(pools, ids, blocks):
@@ -339,22 +391,17 @@ class RealEngine:
             np.int32,
         )
 
-    @staticmethod
-    def _decode_bucket(n: int) -> int:
-        b = 1
-        while b < n:
-            b *= 2
-        return b
+    # Shape bucketing (one shared primitive, core.budget.pow2_bucket):
+    # decode batches / checkpoint id lists pad at floor 1, prefill chunk
+    # lengths at floor 8, so jit retraces are bounded by the bucket count,
+    # not by every batch size or residual chunk length the scheduler
+    # produces.  The fused ragged path buckets its token / sequence /
+    # query-length axes with the same helper (floor 1).
+    _decode_bucket = staticmethod(pow2_bucket)
 
     @staticmethod
     def _chunk_bucket(n: int) -> int:
-        """Pad prefill-chunk length to a power of two (floor 8) so jit
-        retraces of the paged prefill are bounded by the bucket count, not
-        by every residual chunk length the scheduler produces."""
-        b = 8
-        while b < n:
-            b *= 2
-        return b
+        return pow2_bucket(n, floor=8)
 
     def _extract_blocks_paged(self, dev_blocks: List[int]) -> List[Any]:
         """Pack the selected physical blocks with one jitted gather and pull
@@ -511,24 +558,30 @@ class RealEngine:
             # later pure-offline iteration as a spurious abort
             self.flag.clear()
 
-        # ---- prefill chunks ------------------------------------------------
-        if self.paged:
-            aborted = self._prefill_paged_batched(plan, preemptible, tokens)
+        if self.fused:
+            # ---- fused ragged batch (DESIGN.md §12) -----------------------
+            # prefill chunks + decode tokens lower to ONE flattened token
+            # batch, one dispatch per K-layer segment, safepoints between
+            aborted = self._run_fused(plan, preemptible, tokens)
         else:
-            self._prefill_contiguous(plan, tokens)
-
-        # ---- decode batch ---------------------------------------------------
-        if plan.decode_reqs and not aborted:
-            reqs = plan.decode_reqs
+            # ---- prefill chunks -------------------------------------------
             if self.paged:
-                logits, aborted = self._decode_paged(reqs, preemptible)
+                aborted = self._prefill_paged_batched(plan, preemptible, tokens)
             else:
-                logits, aborted = self._decode_contiguous(reqs, preemptible)
-            if not aborted:
-                self._key, sk = jax.random.split(self._key)
-                toks = np.asarray(sample(logits, self.sampling, sk))
-                for i, r in enumerate(reqs):
-                    tokens[r.request_id] = int(toks[i])
+                self._prefill_contiguous(plan, tokens)
+
+            # ---- decode batch ---------------------------------------------
+            if plan.decode_reqs and not aborted:
+                reqs = plan.decode_reqs
+                if self.paged:
+                    logits, aborted = self._decode_paged(reqs, preemptible)
+                else:
+                    logits, aborted = self._decode_contiguous(reqs, preemptible)
+                if not aborted:
+                    self._key, sk = jax.random.split(self._key)
+                    toks = np.asarray(sample(logits, self.sampling, sk))
+                    for i, r in enumerate(reqs):
+                        tokens[r.request_id] = int(toks[i])
 
         sched.commit(plan, self._clock(), aborted=aborted, tokens=tokens)
         if not self.paged:
@@ -556,6 +609,156 @@ class RealEngine:
                     if cache is not None:
                         self.host.put(seq_id, idx, self._extract_block(cache, idx))
         return True
+
+    # ------------------------------------------------- fused ragged execution
+    def _build_ragged(self, items: List[tuple]) -> Dict[str, np.ndarray]:
+        """Lower one iteration's sequences to flat ragged-batch arrays.
+
+        ``items`` holds one ``(q_len, ctx_start, tokens|None, table|None)``
+        per sequence — prefill chunks contribute ``q_len = chunk length``
+        at ``ctx_start = offset``, decodes are the ``q_len = 1`` case at
+        ``ctx_start = total_len - 1``.  ``None`` tokens/tables build a
+        calibration probe that addresses only the scratch row.
+
+        Every variable axis pads to a power-of-two bucket (DESIGN.md §12):
+        T (total tokens), S (sequences) and Qmax (longest per-sequence
+        query run), so fused jit retraces are keyed on the bucket triple.
+        All indirection — KV scatter targets, the (S, Qmax) query padding,
+        the flat unpad gather, per-sequence logit rows — is resolved here
+        on the host; padded tokens scatter to the scratch row and padded
+        query/sequence slots compute garbage nothing reads back.
+        """
+        bs = self.ec.block_size
+        t_pad = pow2_bucket(sum(it[0] for it in items))
+        s_pad = pow2_bucket(len(items))
+        qmax = pow2_bucket(max(it[0] for it in items))
+        a = {
+            "tokens": np.zeros((t_pad,), np.int32),
+            "positions": np.zeros((t_pad,), np.int32),
+            "dst_row": np.full((t_pad,), self._scratch_block, np.int32),
+            "dst_off": np.zeros((t_pad,), np.int32),
+            "tables": np.full(
+                (s_pad, self._table_width), self._scratch_block, np.int32
+            ),
+            "qpad": np.full((s_pad, qmax), t_pad - 1, np.int32),
+            "q_pos": np.zeros((s_pad, qmax), np.int32),
+            "kv_lens": np.zeros((s_pad,), np.int32),
+            "unpad_seq": np.full((t_pad,), s_pad - 1, np.int32),
+            "unpad_j": np.zeros((t_pad,), np.int32),
+            "logit_idx": np.full((s_pad,), t_pad - 1, np.int32),
+        }
+        start = 0
+        for i, (qlen, ctx, toks, table) in enumerate(items):
+            sl = slice(start, start + qlen)
+            pos = ctx + np.arange(qlen, dtype=np.int32)
+            if toks is not None:
+                a["tokens"][sl] = toks
+            a["positions"][sl] = pos
+            if table is not None:
+                a["tables"][i] = table
+                a["dst_row"][sl] = table[pos // bs]
+                a["dst_off"][sl] = pos % bs
+            a["qpad"][i, :qlen] = start + np.arange(qlen, dtype=np.int32)
+            a["q_pos"][i, :qlen] = pos
+            a["kv_lens"][i] = ctx + qlen
+            a["unpad_seq"][sl] = i
+            a["unpad_j"][sl] = np.arange(qlen, dtype=np.int32)
+            a["logit_idx"][i] = start + qlen - 1
+            start += qlen
+        return a
+
+    def _fused_inputs(self, a: Dict[str, np.ndarray]):
+        """Device-place one ragged batch (replicated on a serving mesh)."""
+        meta = tf.RaggedMeta(
+            dst_row=self._put(a["dst_row"]),
+            dst_off=self._put(a["dst_off"]),
+            qpad=self._put(a["qpad"]),
+            q_pos=self._put(a["q_pos"]),
+            kv_lens=self._put(a["kv_lens"]),
+            unpad_seq=self._put(a["unpad_seq"]),
+            unpad_j=self._put(a["unpad_j"]),
+        )
+        return (
+            self._put(a["tokens"]),
+            self._put(a["tables"]),
+            self._put(a["positions"][None]),
+            meta,
+            self._put(a["logit_idx"]),
+        )
+
+    def _dispatch_fused(self, toks, tables, positions, meta, logit_idx,
+                        preemptible: bool):
+        """Run the fused stack: embed, then ONE dispatch per K-layer
+        segment (host-side safepoint cuts between them when the plan is
+        abortable), then the S-row logits program.  Returns
+        (logits | None, aborted)."""
+        x = tf.embed(self.cfg, self.params, toks[None])
+        state = {"x": x}
+
+        def make_seg(lo, pps):
+            def run():
+                self.dispatches["fused_segment"] += 1
+                state["x"], self.pools = self._fused_segment_jit(
+                    pps, np.int32(lo), state["x"], self.pools, tables,
+                    positions, meta,
+                )
+
+            return run
+
+        completed, _done = self.safepoints.run(
+            [make_seg(lo, pps) for lo, pps in tf.segment_spans(self.cfg)],
+            preemptible=preemptible,
+            on_safepoint=self._on_safepoint,
+        )
+        if not completed:
+            self.flag.clear()
+            return None, True
+        self.dispatches["fused_logits"] += 1
+        return self._fused_logits_jit(state["x"], logit_idx), False
+
+    def _run_fused(
+        self, plan, preemptible: bool, tokens: Dict[int, int]
+    ) -> bool:
+        """Execute the whole ``IterationPlan`` as one fused ragged batch.
+
+        Abort rule (Algorithm 2, DESIGN.md §12): ``preemptible`` is set
+        only for pure-offline plans, so an abort at a segment cut only
+        ever discards offline tokens — an iteration containing any online
+        token runs to completion (it is budget-bounded by construction).
+        Returns True if the iteration aborted at a safepoint.
+        """
+        items: List[tuple] = []
+        samplers: List[tuple] = []  # (sequence row, request) to sample
+        for c in plan.prefill_chunks:
+            toks = self._tokens_of(c.request)[c.offset : c.offset + c.length]
+            items.append(
+                (c.length, c.offset, toks,
+                 self._block_table(c.request.request_id))
+            )
+            if (
+                c.offset + c.length == c.request.kv_target
+                and c.request.num_generated == 0
+            ):
+                samplers.append((len(items) - 1, c.request))
+        for r in plan.decode_reqs:
+            items.append(
+                (1, r.total_len - 1, self._tokens_of(r)[-1:],
+                 self._block_table(r.request_id))
+            )
+            samplers.append((len(items) - 1, r))
+        logits, aborted = self._dispatch_fused(
+            *self._fused_inputs(self._build_ragged(items)),
+            preemptible=preemptible,
+        )
+        if aborted:
+            return True
+        if samplers:
+            rows = jnp.asarray([i for i, _ in samplers])
+            self._key, sk = jax.random.split(self._key)
+            toks = np.asarray(sample(logits[rows], self.sampling, sk))
+            for (_, r), t in zip(samplers, toks):
+                tokens[r.request_id] = int(t)
+        return False
 
     # --------------------------------------------------------------- prefill
     def _prefill_paged_batched(
@@ -622,6 +825,7 @@ class RealEngine:
                 tables[i] = self._block_table(c.request.request_id)
                 offs[i] = c.offset
                 last[i] = c.length - 1
+            self.dispatches["prefill"] += 1
             logits, self.pools = self._prefill_jit(
                 self._put(toks),
                 self.pools,
@@ -704,6 +908,7 @@ class RealEngine:
             if aborted:
                 return None, True
         else:
+            self.dispatches["decode"] += 1
             logits, self.pools = self._decode_jit(
                 last_j, self.pools, tables_j, lens_j
             )
@@ -720,6 +925,7 @@ class RealEngine:
 
         def make_seg(lo, pps):
             def run():
+                self.dispatches["segment"] += 1
                 state["x"], self.pools = self._segment_jit(
                     pps, np.int32(lo), state["x"], self.pools, tables,
                     positions,
@@ -790,9 +996,15 @@ class RealEngine:
     ) -> MeasuredProfiler:
         """On-device calibration pass (DESIGN.md §10).
 
-        Times the engine's *own* jitted entry points — prefill chunks at the
-        scheduler's chunk size and decode batches at the power-of-two bucket
-        sizes the jit cache is keyed on — fits a ``MeasuredProfiler``, and
+        Times the engine's *own* jitted entry points — on the fused paged
+        path (DESIGN.md §12) every probe is a fused ragged dispatch:
+        pure-prefill and pure-decode compositions over the classic grid
+        axes, plus mixed chunk+decode probes at
+        ``CalibrationGrid.token_buckets`` so the profiler prices mixed
+        batches directly; on the split paths, prefill chunks at the
+        scheduler's chunk size and decode batches at the power-of-two
+        bucket sizes the jit cache is keyed on — fits a
+        ``MeasuredProfiler``, and
         installs it as the scheduler's latency model so ``calc_budget``
         token budgets reflect measured wall time on this machine instead of
         the analytical roofline.  Also doubles as a jit warm-up: every shape
@@ -830,10 +1042,15 @@ class RealEngine:
             while b <= self._decode_bucket(max(1, self.ec.max_prefill_batch)):
                 pbatches.append(b)
                 b *= 2
+            # fused engines additionally sample mixed ragged dispatches at
+            # the token buckets past one chunk (a chunk plus decode rows),
+            # the shapes only the fused path can execute (DESIGN.md §12)
+            tok0 = pow2_bucket(top + 1)
             grid = CalibrationGrid(
                 chunk_sizes=chunks,
                 prefill_batches=tuple(pbatches) if self.paged else (1,),
                 decode_buckets=tuple(buckets),
+                token_buckets=(tok0, 2 * tok0) if self.fused else (),
             )
 
         def timed(fn) -> float:
@@ -847,7 +1064,68 @@ class RealEngine:
             return best
 
         max_ctx = self.ec.max_model_len
-        if self.paged:
+        fused_timer = None
+        if self.paged and self.fused:
+            # Fused engine (DESIGN.md §12): every serve-time program is a
+            # fused ragged dispatch, so the timers probe exactly those —
+            # pure-prefill and pure-decode compositions reuse the classic
+            # grid axes, and `fused_timer` adds the mixed points the split
+            # paths cannot express.  Probes address only the scratch row.
+            scratch = self._scratch_block
+
+            def _probe(items) -> Callable[[], None]:
+                toks, tables, positions, meta, li = self._fused_inputs(
+                    self._build_ragged(items)
+                )
+                spans = tf.segment_spans(self.cfg)
+
+                def once():
+                    x = tf.embed(self.cfg, self.params, toks[None])
+                    for lo, pps in spans:
+                        x, self.pools = self._fused_segment_jit(
+                            pps, np.int32(lo), x, self.pools, tables,
+                            positions, meta,
+                        )
+                    jax.block_until_ready(
+                        self._fused_logits_jit(x, li)
+                    )
+
+                return once
+
+            def prefill_timer(b: int, c: int) -> float:
+                b = self._decode_bucket(b)
+                c = self._chunk_bucket(min(c, max_ctx))
+                return timed(_probe([(c, 0, None, None)] * b))
+
+            def decode_timer(b: int, ctx: int) -> float:
+                ctx = max(1, min(ctx, max_ctx - 1))
+                return timed(_probe([(1, ctx, None, None)] * b))
+
+            def fused_timer(tok: int, kv: int):
+                c = min(self.sched.sc.chunk_size, max_ctx, tok)
+                # decode rows fill the token bucket, but never beyond the
+                # sequence count a real plan can contain — probing S-shapes
+                # past max_batch_seqs would compile (and on the CPU oracle,
+                # materialize) batches serving can never dispatch
+                ndec = max(0, min(tok - c, self.sched.sc.max_batch_seqs - 1))
+                items = [(c, 0, None, None)] + [(1, kv, None, None)] * ndec
+                shape = BatchShape(
+                    prefill_tokens=c,
+                    prefill_attn_tokens=c * c / 2.0,
+                    prefill_ctx_end=c,
+                    decode_tokens=ndec,
+                    decode_ctx=ndec * kv,
+                    num_seqs=1 + ndec,
+                )
+                return shape, timed(_probe(items))
+
+            def swap_timer(n: int):
+                nbytes = n * block_bytes(self.cfg, self.ec.block_size)
+                return nbytes, timed(
+                    lambda: self._extract_blocks_paged([scratch] * n)
+                )
+
+        elif self.paged:
             width, scratch = self._table_width, self._scratch_block
 
             def prefill_timer(b: int, c: int) -> float:
@@ -927,7 +1205,10 @@ class RealEngine:
 
             swap_timer = None
 
-        prof = calibrate(prefill_timer, decode_timer, max_ctx, grid, swap_timer)
+        prof = calibrate(
+            prefill_timer, decode_timer, max_ctx, grid, swap_timer,
+            fused_timer=fused_timer,
+        )
         self.profile = prof
         self.sched.model = prof
         self.sched._sat_cache = None  # saturation knee derives from the model

@@ -1,11 +1,15 @@
 """Differential token-identity harness across execution backends.
 
-One trace, three executions of RealEngine — they must emit byte-identical
-greedy tokens (DESIGN.md §11):
+One trace, four executions of RealEngine — they must emit byte-identical
+greedy tokens (DESIGN.md §11/§12):
 
   * ``contiguous``   — per-request stacked caches (the §4 fallback layout),
-  * ``paged``        — shared block pool, single device,
-  * ``sharded paged``— the same pool sharded over a tensor-parallel serving
+  * ``split paged``  — shared block pool, per-family dispatches
+                       (``fused_batch=False``, the §9 oracle paths),
+  * ``fused paged``  — the same pool, every iteration lowered to ONE
+                       ragged token batch (prefill chunks + decodes) and
+                       dispatched once per K-layer segment (§12),
+  * ``sharded fused``— the fused path over a tensor-parallel serving
                        mesh (``launch.mesh.make_serving_mesh``).
 
 The sharded leg uses as many devices as are visible (capped at 4): under
@@ -101,19 +105,64 @@ def test_backends_emit_identical_tokens(arch, jobs, preempt_step, eng_kw):
     out_c, on_c, _ = _run(arch, "contiguous", jobs, preempt_step,
                           eng_kw=eng_kw)
     out_p, on_p, reqs_p = _run(arch, "paged", jobs, preempt_step,
+                               eng_kw=dict(eng_kw, fused_batch=False))
+    out_f, on_f, reqs_f = _run(arch, "paged", jobs, preempt_step,
                                eng_kw=eng_kw)
     out_s, on_s, reqs_s = _run(arch, "paged", jobs, preempt_step,
                                mesh=make_serving_mesh(_tp()), eng_kw=eng_kw)
     assert [len(o) for o in out_p] == [g for _, g in jobs]
-    assert out_p == out_c, "paged backend diverged from contiguous"
-    assert out_s == out_p, "sharded paged backend diverged from single-device"
-    assert on_s == on_p == on_c, "online request tokens diverged"
+    assert out_p == out_c, "split paged backend diverged from contiguous"
+    assert out_f == out_p, "fused ragged path diverged from split paged"
+    assert out_s == out_f, "sharded fused backend diverged from single-device"
+    assert on_s == on_f == on_p == on_c, "online request tokens diverged"
     if preempt_step is not None:
         # the scenario must actually exercise preempt/resume, identically
-        # in both paged legs (the block manager is mesh-oblivious)
+        # in all paged legs (the block manager is dispatch-oblivious)
         npre = sum(r.num_preemptions for r in reqs_p)
         assert npre > 0, "preemption scenario did not preempt"
+        assert sum(r.num_preemptions for r in reqs_f) == npre
         assert sum(r.num_preemptions for r in reqs_s) == npre
+
+
+def test_fused_mid_iteration_abort_is_exact():
+    """Mid-iteration safepoint abort on the fused path (DESIGN.md §12):
+    force the preemption flag at the FIRST safepoint cut inside a
+    pure-offline fused iteration — after one K-layer segment has already
+    scattered this iteration's KV into the pool — and the run must still
+    emit byte-identical tokens: the aborted tokens' pool writes sit at
+    uncommitted positions and are rewritten verbatim on re-execution.
+    Asserts the abort actually happened and that the aborted iteration
+    dispatched fewer segments than a completed one would."""
+    cfg, params = _model("llama-2-7b")
+    jobs = [(40, 8)] * 3
+
+    def _go(abort_at_step):
+        eng = RealEngine(
+            cfg, params, eng_cfg=RealEngineConfig(backend="paged")
+        )
+        reqs = [
+            _mkreq(cfg, Priority.OFFLINE, plen, gen, seed)
+            for seed, (plen, gen) in enumerate(jobs)
+        ]
+        for r in reqs:
+            eng.submit(r)
+        if abort_at_step is not None:
+            for _ in range(abort_at_step):
+                eng.step()
+            eng.arrival_poll = lambda: eng.flag.set()
+            before = eng.dispatches["fused_segment"]
+            eng.step()
+            assert eng.safepoints.stats.preemptions == 1, "no abort happened"
+            assert (
+                eng.dispatches["fused_segment"] - before
+                < tf.num_segments(cfg)
+            ), "aborted iteration ran every segment"
+            eng.arrival_poll = None
+        eng.run()
+        return [r.output_tokens for r in reqs]
+
+    assert tf.num_segments(cfg) > 1, "config cannot express a mid-batch cut"
+    assert _go(3) == _go(None), "abort changed the emitted tokens"
 
 
 def test_sharded_pool_is_actually_sharded():

@@ -106,6 +106,76 @@ def test_paged_attention_property(b, g, hkv, page, m):
     assert float(jnp.max(jnp.abs(out - want))) < 2e-5
 
 
+# -------------------------------------------------------------- fused ragged
+
+RAGGED_CASES = [
+    # q_lens per sequence (mixed chunks + decodes), h, hkv, d, page, m
+    ([1, 1, 1], 8, 2, 64, 16, 4),  # pure decode (q_len = 1 degenerate case)
+    ([8, 1, 4, 1], 4, 2, 32, 8, 6),  # mixed prefill chunks + decodes
+    ([6, 3], 4, 4, 32, 8, 4),  # dense (g = 1) ragged chunks
+    ([5, 1], 16, 1, 64, 16, 3),  # MQA
+]
+
+
+@pytest.mark.parametrize("case", RAGGED_CASES)
+@pytest.mark.parametrize("softcap", [0.0, 30.0])
+def test_ragged_paged_attention_matches_ref(case, softcap):
+    """The fused mixed-batch kernel (interpret mode) vs the jnp oracle:
+    one grid covers prefill chunks and decode rows; each sequence's
+    queries sit at the tail of its context (the serve-time layout).
+    Padded query slots are compared too — the kernel and oracle mask them
+    identically via the causal + kv_len bound."""
+    from repro.kernels.paged_attention import ragged_paged_attention
+
+    q_lens, h, hkv, d, page, m = case
+    s = len(q_lens)
+    qmax = max(q_lens)
+    npages = s * m
+    q = _rand((s, qmax, h, d), jnp.float32, 40)
+    kp = _rand((npages, page, hkv, d), jnp.float32, 41)
+    vp = _rand((npages, page, hkv, d), jnp.float32, 42)
+    key = jax.random.fold_in(KEY, 43)
+    perm = jax.random.permutation(key, npages)[: s * m].reshape(s, m)
+    kv_lens = jax.random.randint(
+        jax.random.fold_in(KEY, 44), (s,), max(q_lens), m * page + 1
+    )
+    # queries are the tail of the context; padded slots repeat the last
+    # real position (mask-equivalent garbage on both sides)
+    ql = jnp.asarray(q_lens)
+    j = jnp.arange(qmax)[None, :]
+    q_pos = kv_lens[:, None] - ql[:, None] + jnp.minimum(j, ql[:, None] - 1)
+    out = ragged_paged_attention(
+        q, kp, vp, perm, q_pos, kv_lens, logit_softcap=softcap,
+        interpret=True,
+    )
+    want = ref.ragged_paged_attention_ref(
+        q, kp, vp, perm, q_pos, kv_lens, logit_softcap=softcap
+    )
+    assert float(jnp.max(jnp.abs(out - want))) < 2e-5
+
+
+def test_ragged_kernel_decode_degenerates_to_paged_attention():
+    """At qmax = 1 the ragged kernel must agree with the decode kernel —
+    same pools, tables and lengths, query at position len-1."""
+    from repro.kernels.paged_attention import (
+        paged_attention, ragged_paged_attention,
+    )
+
+    b, h, hkv, d, page, m, npages = 2, 8, 2, 64, 16, 3, 8
+    q = _rand((b, h, d), jnp.float32, 50)
+    kp = _rand((npages, page, hkv, d), jnp.float32, 51)
+    vp = _rand((npages, page, hkv, d), jnp.float32, 52)
+    perm = jax.random.permutation(jax.random.fold_in(KEY, 53), npages)[
+        : b * m
+    ].reshape(b, m)
+    lens = jnp.array([37, 12], jnp.int32)
+    dec = paged_attention(q, kp, vp, perm, lens, interpret=True)
+    rag = ragged_paged_attention(
+        q[:, None], kp, vp, perm, (lens - 1)[:, None], lens, interpret=True
+    )
+    assert float(jnp.max(jnp.abs(rag[:, 0] - dec))) < 2e-5
+
+
 # --------------------------------------------------------- checkpoint gather
 
 

@@ -5,7 +5,9 @@
  * token parity: paged engine vs contiguous engine, uninterrupted
  * token identity on the paged pool under forced preemption + IC restore,
    and under blocking swap-out preemption
- * decode jit recompilation bounded by the batch-bucket count
+ * decode jit recompilation bounded by the batch-bucket count (split path)
+ * fused-path jit recompilation bounded by the ragged bucket triple
+   (DESIGN.md §12) and one dispatch per K-layer segment per iteration
 """
 import jax
 import jax.numpy as jnp
@@ -218,10 +220,12 @@ def test_paged_token_identity_under_swap_preemption():
 
 def test_decode_recompiles_bounded_by_buckets():
     """Batch sizes 5,4,3,2,1 appear as requests drain; bucketed padding must
-    trace at most the 4 distinct buckets {8,4,2,1}, not all 5 sizes."""
+    trace at most the 4 distinct buckets {8,4,2,1}, not all 5 sizes.
+    (Split path: the fused path never dispatches the decode program.)"""
     gens = (4, 6, 8, 10, 12)
     eng, outs, _ = _run(
-        "paged", gens=gens, eng_kw=dict(enable_safepoints=False)
+        "paged", gens=gens,
+        eng_kw=dict(enable_safepoints=False, fused_batch=False),
     )
     assert [len(o) for o in outs] == list(gens)
     buckets = {RealEngine._decode_bucket(n) for n in range(1, len(gens) + 1)}
@@ -242,7 +246,9 @@ def test_retrace_regression_guard_mixed_onoff_drain():
     """
     eng = RealEngine(
         CFG, PARAMS,
-        eng_cfg=RealEngineConfig(backend="paged", enable_safepoints=False),
+        eng_cfg=RealEngineConfig(
+            backend="paged", enable_safepoints=False, fused_batch=False
+        ),
     )
     gens = (4, 6, 8, 10, 12)
     plens = (40, 24, 40, 10, 40)
@@ -260,4 +266,112 @@ def test_retrace_regression_guard_mixed_onoff_drain():
     assert eng.prefill_trace_count == 3, (
         f"prefill retraces changed: {eng.prefill_trace_count} (was 3); "
         "did a dispatch change break (batch x length) bucketing?"
+    )
+
+
+def test_run_tokens_paged_matches_segmented_composition():
+    """The whole-stack fused entry (`run_tokens_paged`) must equal the
+    engine's segmented composition (embed -> run_tokens_paged_at per
+    segment -> ragged_lm_head) bitwise, logits and pools — the invariant
+    that makes host-side safepoint cuts free of numerical consequence."""
+    eng = RealEngine(CFG, PARAMS, eng_cfg=RealEngineConfig(backend="paged"))
+    eng.blocks.register_seq(1)
+    eng.blocks.grow(1, 8)
+    eng.blocks.register_seq(2)
+    eng.blocks.grow(2, 6)
+    items = [
+        (8, 0, np.arange(8, dtype=np.int32), eng._block_table(1)),
+        (1, 5, np.array([3], np.int32), eng._block_table(2)),
+    ]
+    toks, tables, positions, meta, li = eng._fused_inputs(
+        eng._build_ragged(items)
+    )
+    logits_full, pools_full = tf.run_tokens_paged(
+        CFG, PARAMS, toks, eng.pools, tables, positions[0], meta, li
+    )
+    x = tf.embed(CFG, PARAMS, toks[None])
+    pools_seg = eng.pools
+    for lo, pps in tf.segment_spans(CFG):
+        x, pools_seg = tf.run_tokens_paged_at(
+            CFG, PARAMS, pps, jnp.int32(lo), x, pools_seg, tables,
+            positions, meta,
+        )
+    logits_seg = tf.ragged_lm_head(CFG, PARAMS, x, li)
+    assert jnp.array_equal(logits_full, logits_seg)
+    assert all(
+        jnp.array_equal(a, b)
+        for a, b in zip(jax.tree.leaves(pools_full), jax.tree.leaves(pools_seg))
+    )
+
+
+def test_fused_mixed_iteration_is_one_dispatch_per_segment():
+    """The §12 acceptance property, stated directly: an iteration
+    co-serving >=1 ONLINE decode with >=1 OFFLINE prefill chunk executes
+    as exactly one device dispatch per K-layer segment (plus the one
+    logits program) — no separate prefill/decode dispatch families."""
+    eng = RealEngine(
+        CFG, PARAMS,
+        eng_cfg=RealEngineConfig(backend="paged", enable_safepoints=False),
+    )
+    # get an online request into the decode phase first
+    online = mkreq(Priority.ONLINE, 40, 8, 0)
+    eng.submit(online)
+    for _ in range(3):
+        eng.step()
+    assert online.num_generated >= 1, "online request must be decoding"
+    # now co-serve: an offline prompt joins as prefill chunks
+    offline = mkreq(Priority.OFFLINE, 40, 4, 1)
+    eng.submit(offline)
+    before = dict(eng.dispatches)
+    gen0 = online.num_generated
+    eng.step()
+    from repro.models import transformer as tf
+
+    assert online.num_generated == gen0 + 1, "online decode did not advance"
+    assert offline.num_prefilled > 0, "offline chunk was not co-served"
+    delta = {k: eng.dispatches[k] - before[k] for k in eng.dispatches}
+    assert delta == {
+        "prefill": 0, "decode": 0, "segment": 0,
+        "fused_segment": tf.num_segments(CFG), "fused_logits": 1,
+    }, delta
+
+
+def test_fused_retrace_regression_guard_mixed_onoff_drain():
+    """The fused-path twin of the guard above (DESIGN.md §12): the same
+    fixed draining mixed ON/OFF workload must keep fused-segment jit
+    retraces at the documented value — the trace key is the ragged bucket
+    triple (token bucket T, sequence bucket S, query-length bucket Qmax)
+    times the distinct segment lengths, NOT one program per iteration
+    shape.  On this trace the engine compiles 5 programs today; the hard
+    ceiling is |T buckets reachable| x |S buckets| x |Qmax buckets| x
+    |segment lengths| — far below the ~20 distinct iteration shapes the
+    drain produces.  Also asserts the fusion contract itself: every
+    iteration executed exactly one dispatch per K-layer segment and the
+    split-path programs never ran.
+    """
+    eng = RealEngine(
+        CFG, PARAMS,
+        eng_cfg=RealEngineConfig(backend="paged", enable_safepoints=False),
+    )
+    gens = (4, 6, 8, 10, 12)
+    plens = (40, 24, 40, 10, 40)
+    for s, (p, g) in enumerate(zip(plens, gens)):
+        eng.submit(mkreq(Priority.OFFLINE, p, g, s))
+    for _ in range(4):
+        eng.step()
+    for s in range(3):
+        eng.on_online_arrival(mkreq(Priority.ONLINE, 60, 8, 100 + s))
+    eng.run()
+    from repro.models import transformer as tf
+
+    assert eng.dispatches["fused_segment"] == eng.steps * tf.num_segments(
+        CFG
+    ), "an iteration did not execute as one dispatch per K-layer segment"
+    assert eng.dispatches["fused_logits"] == eng.steps
+    assert eng.dispatches["prefill"] == eng.dispatches["decode"] == 0, (
+        "fused engine dispatched a split-path program"
+    )
+    assert eng.fused_trace_count == 5, (
+        f"fused retraces changed: {eng.fused_trace_count} (was 5); "
+        "did a dispatch change break (token x seq x qlen) bucketing?"
     )
