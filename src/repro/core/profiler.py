@@ -308,6 +308,13 @@ class CalibrationGrid:
     token_buckets: Tuple[int, ...] = ()
     repeats: int = 3  # timed runs per shape (min is taken)
     warmup: int = 1  # untimed runs per shape (absorbs compilation)
+    # Pipelined steady-state timing (DESIGN.md §13): fused probes enqueue
+    # this many iterations back-to-back and block once at the end, dividing
+    # by the depth — so on a pipelined engine the fitted per-iteration cost
+    # reflects host work overlapped with device compute, not the serial
+    # enqueue->block->enqueue cadence that engine never runs.  Depth 1
+    # (the default, and what split/serial engines use) is plain timing.
+    pipeline_depth: int = 1
     # checkpoint-extract timing; power-of-two counts double as warm-up of
     # the bucketed extract gather (RealEngine pads id lists to these)
     swap_block_counts: Tuple[int, ...] = (1, 2, 4, 8)

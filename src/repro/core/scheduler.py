@@ -75,6 +75,26 @@ class IterationPlan:
 
 
 @dataclass
+class SchedulerSnapshot:
+    """Rollback state for a speculatively planned iteration (see
+    ``UnifiedScheduler.snapshot`` / ``restore``, DESIGN.md §13)."""
+
+    online_q: List[Request]
+    offline_q: List[Request]
+    running: List[Request]
+    preempted: List[Request]
+    finished: List[Request]
+    events: List[Tuple[str, Request, list]]
+    t_sched: float
+    current_plan: Optional[IterationPlan]
+    blocks: tuple  # BlockManager.snapshot()
+    known_ids: set  # id() of every request known at snapshot time
+    # (request, phase, num_prefilled, num_preemptions, host_recoverable,
+    #  first_scheduled_time) — the plan-mutable Request fields
+    req_state: List[tuple]
+
+
+@dataclass
 class SchedulerConfig:
     chunk_size: int = 512  # chunked-prefill unit (paper adopts Sarathi-style)
     max_batch_seqs: int = 256
@@ -491,6 +511,68 @@ class UnifiedScheduler:
                 scheduled += 1
         self.preempted = still
         return scheduled
+
+    # ------------------------------------------------------- plan preview
+    def snapshot(self) -> "SchedulerSnapshot":
+        """Checkpoint everything ``plan_iteration`` can mutate, so a plan
+        can be built *speculatively* and rolled back with ``restore`` if it
+        is invalidated before dispatch (the pipelined engine's
+        double-buffering, DESIGN.md §13).
+
+        Covers the queues/running/preempted/finished lists, the pending
+        engine events, the block manager's accounting, and the per-request
+        fields planning touches (phase, prefill progress, preemption
+        bookkeeping, first-scheduled time).  Token progress
+        (``num_generated`` / ``output_tokens``) is commit-owned and never
+        moves at plan time, so it is deliberately not captured.
+        """
+        reqs = self.all_requests()
+        return SchedulerSnapshot(
+            online_q=list(self.online_q),
+            offline_q=list(self.offline_q),
+            running=list(self.running),
+            preempted=list(self.preempted),
+            finished=list(self.finished),
+            events=list(self.events),
+            t_sched=self.t_sched,
+            current_plan=self.current_plan,
+            blocks=self.blocks.snapshot(),
+            known_ids={id(r) for r in reqs},
+            req_state=[
+                (
+                    r,
+                    r.phase,
+                    r.num_prefilled,
+                    r.num_preemptions,
+                    r.host_recoverable,
+                    r.first_scheduled_time,
+                )
+                for r in reqs
+            ],
+        )
+
+    def restore(self, snap: "SchedulerSnapshot") -> None:
+        """Discard a speculative plan: rewind to ``snap``, keeping requests
+        submitted *after* the snapshot queued (arrivals are exactly what
+        invalidates a staged plan — they must survive the rollback and be
+        replanned, never dropped)."""
+        new_online = [r for r in self.online_q if id(r) not in snap.known_ids]
+        new_offline = [r for r in self.offline_q if id(r) not in snap.known_ids]
+        self.online_q = list(snap.online_q) + new_online
+        self.offline_q = list(snap.offline_q) + new_offline
+        self.running = list(snap.running)
+        self.preempted = list(snap.preempted)
+        self.finished = list(snap.finished)
+        self.events = list(snap.events)
+        self.t_sched = snap.t_sched
+        self.current_plan = snap.current_plan
+        self.blocks.restore(snap.blocks)
+        for r, phase, npref, npre, hrec, fst in snap.req_state:
+            r.phase = phase
+            r.num_prefilled = npref
+            r.num_preemptions = npre
+            r.host_recoverable = hrec
+            r.first_scheduled_time = fst
 
     def _reap_finished(self) -> None:
         done = [r for r in self.running if r.phase == Phase.FINISHED]

@@ -279,6 +279,46 @@ class BlockManager:
                 break
         return min(n, sb.num_tokens)
 
+    # ------------------------------------------------------------ speculation
+    def snapshot(self) -> tuple:
+        """Cheap copy of the full accounting state (free lists + per-seq
+        block tables) — O(sequences × blocks), plain ints.  Taken before a
+        *speculative* ``plan_iteration`` so the pipelined engine can roll
+        back every allocation/preemption/resume the plan made if the
+        staged batch is invalidated before dispatch (DESIGN.md §13).
+        Device data is untouched by construction: planning only edits
+        tables, never issues copies."""
+        return (
+            list(self._free_device),
+            list(self._free_host),
+            {
+                sid: (
+                    sb.num_tokens,
+                    list(sb.device_blocks),
+                    list(sb.host_blocks),
+                    sb.on_device,
+                )
+                for sid, sb in self._seqs.items()
+            },
+        )
+
+    def restore(self, snap: tuple) -> None:
+        """Inverse of ``snapshot``: rewind to exactly that accounting state
+        (sequences registered/freed/preempted since are forgotten)."""
+        free_d, free_h, seqs = snap
+        self._free_device = list(free_d)
+        self._free_host = list(free_h)
+        self._seqs = {
+            sid: SeqBlocks(
+                seq_id=sid,
+                num_tokens=nt,
+                device_blocks=list(db),
+                host_blocks=list(hb),
+                on_device=od,
+            )
+            for sid, (nt, db, hb, od) in seqs.items()
+        }
+
     # ------------------------------------------------------------------ free
     def free_seq(self, seq_id: int) -> None:
         sb = self._seqs.pop(seq_id)

@@ -32,3 +32,20 @@ def sample(
         kth = jax.lax.top_k(logits, params.top_k)[0][..., -1:]
         logits = jnp.where(logits < kth, -jnp.inf, logits)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+def sample_rows(
+    logits: jnp.ndarray,  # (S, V) per-sequence last-token logits
+    rows: jnp.ndarray,  # (B,) sequence rows to sample (padded, dups allowed)
+    params: SamplingParams,
+    key: jax.Array,
+) -> jnp.ndarray:
+    """Gather-then-sample as ONE device program (B,) int32.
+
+    The pipelined engine (DESIGN.md §13) jits this so sampling is an
+    *enqueued* device step whose result is fetched asynchronously, instead
+    of an eager host round-trip on the critical path.  ``rows`` pads to a
+    power-of-two bucket; padded draws are discarded by the caller (greedy
+    argmax is row-independent, so padding never perturbs real rows).
+    """
+    return sample(jnp.take(logits, rows, axis=0), params, key)

@@ -769,19 +769,10 @@ def run_tokens_paged_at(
     rewritten verbatim on re-execution (§12 abort soundness)."""
     pools = constrain_paged_pools(pools, mesh)
     sl = lambda a: jax.lax.dynamic_slice_in_dim(a, lo, seg_periods, axis=0)
-    lp = jax.tree.map(sl, params["layers"])
     ps = jax.tree.map(sl, pools)
-    x, ps_new, _ = run_periods(
-        cfg,
-        lp,
-        x,
-        mode="ragged",
-        positions=positions,
-        caches=ps,
-        block_tables=block_tables,
-        ragged=meta,
-        capacity_factor=-1.0,
-        mesh=mesh,
+    x, ps_new = run_tokens_paged_seg(
+        cfg, params, seg_periods, lo, x, ps, block_tables, positions,
+        meta, mesh=mesh,
     )
     merged = jax.tree.map(
         lambda a, u: jax.lax.dynamic_update_slice_in_dim(a, u, lo, axis=0),
@@ -789,6 +780,48 @@ def run_tokens_paged_at(
         ps_new,
     )
     return x, constrain_paged_pools(merged, mesh)
+
+
+def run_tokens_paged_seg(
+    cfg: ModelConfig,
+    params: PyTree,
+    seg_periods: int,  # periods in this segment (STATIC under jit)
+    lo: jnp.ndarray,  # starting period (traced)
+    x: jnp.ndarray,  # (1, T, d) flattened ragged activations
+    pool_seg: Dict[str, PyTree],  # THIS segment's period slice of the pools
+    block_tables: jnp.ndarray,  # (S, M)
+    positions: jnp.ndarray,  # (1, T)
+    meta: RaggedMeta,
+    mesh=None,
+) -> Tuple[jnp.ndarray, Dict[str, PyTree]]:
+    """One K-layer segment operating on *its own period slice* of the
+    pools: takes the slice, returns the updated slice.
+
+    Segments partition the period axis, so a segment never reads another
+    segment's slice — keeping the pools permanently split per segment
+    (the pipelined engine, DESIGN.md §13) is bitwise identical to the
+    whole-pool form above.  The payoff is donation that composes with
+    async dispatch: each slice is donated to the segment that owns it,
+    whose previous donation hold (the same segment, one iteration ago)
+    has long retired by the time the host enqueues — so the update is
+    in-place with no whole-pool read/write-back traffic and no host
+    stall on the CPU client's donation holds."""
+    pool_seg = constrain_paged_pools(pool_seg, mesh)
+    sl = lambda a: jax.lax.dynamic_slice_in_dim(a, lo, seg_periods, axis=0)
+    lp = jax.tree.map(sl, params["layers"])
+    x, ps_new, _ = run_periods(
+        cfg,
+        lp,
+        x,
+        mode="ragged",
+        positions=positions,
+        caches=pool_seg,
+        block_tables=block_tables,
+        ragged=meta,
+        capacity_factor=-1.0,
+        mesh=mesh,
+    )
+    return x, constrain_paged_pools(ps_new, mesh)
 
 
 def ragged_lm_head(
@@ -801,6 +834,25 @@ def ragged_lm_head(
     flat axis first, so the LM head prices O(S·V), not O(T·V)."""
     xl = jnp.take(x[0], logit_index, axis=0)[:, None, :]
     return lm_head(cfg, params, xl)[:, 0, :]
+
+
+def inject_sampled(
+    tokens: jnp.ndarray,  # (T,) flat ragged token batch (padded)
+    idx: jnp.ndarray,  # (R,) flat slots to overwrite
+    sampled: jnp.ndarray,  # (B,) last iteration's sampled tokens (padded)
+    rows: jnp.ndarray,  # (R,) row of each slot's value within `sampled`
+) -> jnp.ndarray:
+    """Deferred-token injection for the pipelined engine (DESIGN.md §13).
+
+    A speculatively built ragged batch cannot know the token values the
+    in-flight iteration is still computing — each affected decode slot is
+    built with a placeholder, and this one device-side scatter resolves
+    them from the previous iteration's sampled-token buffer without any
+    host round-trip.  ``idx``/``rows`` pad by *repeating* a real pair
+    (never a reserved slot: a full batch has no spare token row), which is
+    idempotent under ``.at[].set``.
+    """
+    return tokens.at[idx].set(jnp.take(sampled, rows, axis=0))
 
 
 # ---------------------------------------------------------------------------

@@ -72,8 +72,9 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from collections import deque
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -101,7 +102,7 @@ from repro.core.slo import SLO
 from repro.kvcache.block_manager import BlockManager
 from repro.models import transformer as tf
 from repro.models.config import ModelConfig
-from repro.models.sampling import SamplingParams, sample
+from repro.models.sampling import SamplingParams, sample, sample_rows
 
 
 @dataclass
@@ -127,11 +128,67 @@ class RealEngineConfig:
     # differential oracle.  Paged backend only; ignored on the
     # contiguous fallback.
     fused_batch: bool = True
+    # Async host/device pipeline (DESIGN.md §13), fused paged backend only:
+    # while iteration N's K-layer segments run on device, the host
+    # speculatively plans and builds iteration N+1 (double-buffered ragged
+    # inputs, deferred-token injection, async sampled-token readback), so
+    # the next dispatch launches with near-zero host gap.  An arrival
+    # invalidates the staged batch — it is rolled back and replanned — and
+    # a safepoint abort simply discards it with the aborted iteration, so
+    # Algorithm 2 semantics and bitwise token identity are preserved.  Off
+    # by default: the serial fused path is the differential oracle for it.
+    pipeline: bool = False
     # Tensor-parallel serving mesh (jax.sharding.Mesh with a "model" axis;
     # see launch.mesh.make_serving_mesh).  Paged backend only: the shared
     # pools shard over KV heads, everything host-side stays mesh-oblivious
     # (DESIGN.md §11).  None = plain single-device execution.
     mesh: Optional[Any] = None
+
+
+class _PendingFetch:
+    """One iteration's sampled tokens, in flight from device to host
+    (DESIGN.md §13).
+
+    ``arr`` is the padded ``(B,)`` device buffer produced by the jitted
+    ``sample_rows`` program; ``reqs`` the requests in sampler order.  The
+    constructor starts a non-blocking readback, so by the time ``resolve``
+    runs (next step's post-work, or a pipeline flush) the bytes are
+    usually already on host.  ``resolve`` backfills
+    ``Request.output_tokens`` — the structural commit already *counted*
+    these tokens via ``record_token(..., None)``, it just didn't know
+    their values yet."""
+
+    __slots__ = ("arr", "reqs")
+
+    def __init__(self, arr, reqs):
+        self.arr = arr
+        self.reqs = list(reqs)
+        try:
+            arr.copy_to_host_async()
+        except Exception:  # backends without async readback: resolve() blocks
+            pass
+
+    def resolve(self) -> None:
+        vals = np.asarray(self.arr)
+        for i, r in enumerate(self.reqs):
+            r.output_tokens.append(int(vals[i]))
+
+
+@dataclass
+class _StagedBatch:
+    """A speculatively planned+built iteration awaiting dispatch (§13).
+
+    ``snap`` rolls the scheduler back if ``gen`` goes stale (an arrival
+    landed after staging) or the plan is otherwise discarded before
+    dispatch; the device-placed ``inputs`` are simply dropped — their
+    enqueued transfers/injections write nothing any committed program
+    reads."""
+
+    plan: Any
+    snap: Any
+    gen: int
+    samplers: List[tuple]
+    inputs: tuple
 
 
 class RealEngine:
@@ -226,6 +283,38 @@ class RealEngine:
         self.profile: Optional[MeasuredProfiler] = None  # set by calibrate()
 
         self.fused = self.paged and eng_cfg.fused_batch
+        self.pipeline = bool(eng_cfg.pipeline)
+        if self.pipeline and not self.fused:
+            raise ValueError(
+                "pipeline=True requires the fused paged backend "
+                "(backend='paged'/'auto' with fused_batch=True)"
+            )
+        # ---- async host/device pipeline state (DESIGN.md §13) ----------
+        self._staged: Optional[_StagedBatch] = None
+        self._plan_gen = 0  # bumped per arrival; invalidates staged plans
+        self._fetches: Deque[_PendingFetch] = deque()
+        self._ckpt_pending: List[tuple] = []  # (chosen, staged device gather)
+        # (witness, displaced pool slice) pairs: buffers donated to an
+        # in-flight segment/restore, parked until the witness (an output
+        # of the donating program) is ready — dropping them earlier blocks
+        # the host on the CPU client's donation hold (see _drop_retired)
+        self._retired: Deque[tuple] = deque()
+        self.pipeline_discards = 0  # staged batches invalidated pre-dispatch
+        self.pipeline_trace_count = 0  # sample_rows / inject_sampled retraces
+        # Host-gap instrumentation: per-iteration device-idle time — the
+        # serial host span (sample readback, commit, plan, batch build)
+        # during which the device has an empty queue, which the pipeline
+        # exists to hide.  ``_t_last_enqueue`` marks where the current
+        # gap's clock started (a drain point on serial turns, the last
+        # enqueue otherwise); ``_last_out`` is the final array enqueued —
+        # if it is still not ready when the next batch is handed over, the
+        # device never idled and the sample records 0.  The counters are
+        # monotone (never reset); the list feeds bench percentiles.
+        self._t_last_enqueue: Optional[float] = None
+        self._last_out: Optional[Any] = None
+        self.host_gap_s: List[float] = []
+        self.host_gap_count = 0
+        self.host_gap_seconds = 0.0
         if self.paged:
             # Shared physical pools + one scratch row (id num_device_blocks)
             # that absorbs writes from padded batch rows / padded table
@@ -243,6 +332,17 @@ class RealEngine:
                 self.pools = jax.device_put(
                     self.pools, pool_shardings(self.pools, self.mesh)
                 )
+            if self.pipeline:
+                # Pipelined engines keep the pools permanently split per
+                # fused segment so each segment program donates only its
+                # own period slice (DESIGN.md §13).  ``self.pools`` is
+                # dropped so any stale whole-pool path fails loudly.
+                self._pool_spans = tf.segment_spans(cfg)
+                self._pool_segs = [
+                    jax.tree.map(lambda a: a[lo : lo + pps], self.pools)
+                    for lo, pps in self._pool_spans
+                ]
+                self.pools = None
 
             def _decode_paged(last, pools, tables, lens):
                 self.decode_trace_count += 1  # runs only while tracing
@@ -291,6 +391,98 @@ class RealEngine:
             self._fused_logits_jit = jax.jit(
                 lambda x, li: tf.ragged_lm_head(self.cfg, self.params, x, li)
             )
+
+            # pipelined-engine programs (DESIGN.md §13): the per-segment
+            # pool-slice program, sampling as an enqueued device step
+            # (result fetched asynchronously) and the deferred-token
+            # scatter that patches a speculatively built batch with the
+            # previous iteration's still-on-device samples.
+            #
+            # Why a separate segment program: the whole-pool form donates
+            # the pools, but the CPU client's donation hold makes *every*
+            # interaction with a donated-and-pending buffer block until
+            # the donating computation retires — enqueueing the consumer
+            # (definition-event wait) and even dropping the Python
+            # reference (deletion wait).  A whole-pool donation chain
+            # therefore serializes exactly the overlap the pipeline
+            # exists to create.  The pipelined engine keeps the pools
+            # permanently SPLIT per segment (``_pool_segs``): each
+            # segment donates only its own slice, whose previous hold
+            # (the same segment, one iteration ago) retired long before
+            # the host enqueues — in-place updates AND real overlap.  The
+            # displaced slice references are parked in ``_retired`` until
+            # their holds provably resolved (see _drop_retired).
+            def _fused_segment_seg(pps, lo, x, pool_seg, tables, positions,
+                                   meta):
+                self.fused_trace_count += 1  # runs only while tracing
+                return tf.run_tokens_paged_seg(
+                    self.cfg, self.params, pps, lo, x, pool_seg, tables,
+                    positions, meta, mesh=self.mesh,
+                )
+
+            self._fused_segment_seg_jit = jax.jit(
+                _fused_segment_seg, static_argnums=(0,), donate_argnums=(3,)
+            )
+
+            def _extract_segs(segs, ids):
+                # seg-split twin of _extract: per-slice gathers concatenate
+                # back to the period-major host checkpoint layout
+                parts = [
+                    {
+                        pos: {"k": p["k"][:, ids], "v": p["v"][:, ids]}
+                        for pos, p in seg.items()
+                    }
+                    for seg in segs
+                ]
+                return {
+                    pos: {
+                        kv: jnp.concatenate(
+                            [pt[pos][kv] for pt in parts], axis=0
+                        )
+                        for kv in ("k", "v")
+                    }
+                    for pos in parts[0]
+                }
+
+            self._extract_segs_jit = jax.jit(_extract_segs)
+
+            def _restore_segs(segs, ids, blocks):
+                # seg-split twin of _restore: scatter each slice's period
+                # range of the host-staged blocks into its donated slice
+                out, off = [], 0
+                for seg in segs:
+                    pps = jax.tree.leaves(seg)[0].shape[0]
+                    new = {
+                        pos: {
+                            kv: p[kv]
+                            .at[:, ids]
+                            .set(blocks[pos][kv][off : off + pps])
+                            for kv in ("k", "v")
+                        }
+                        for pos, p in seg.items()
+                    }
+                    out.append(tf.constrain_paged_pools(new, self.mesh))
+                    off += pps
+                return tuple(out)
+
+            self._restore_segs_jit = jax.jit(
+                _restore_segs, donate_argnums=(0,)
+            )
+
+            def _sample_rows(logits, rows, key):
+                self.pipeline_trace_count += 1  # runs only while tracing
+                return sample_rows(logits, rows, self.sampling, key)
+
+            self._sample_jit = jax.jit(_sample_rows)
+
+            def _inject(toks, idx, sampled, srows):
+                self.pipeline_trace_count += 1  # runs only while tracing
+                return tf.inject_sampled(toks, idx, sampled, srows)
+
+            # never donated: the displaced tokens buffer is dropped right
+            # after the call, and deleting a donated-and-pending buffer
+            # blocks until the whole in-flight chain retires (see above)
+            self._inject_jit = jax.jit(_inject)
 
             def _restore(pools, ids, blocks):
                 new = {
@@ -353,6 +545,7 @@ class RealEngine:
         if req.prompt is None:
             raise ValueError("real engine requires prompt token ids")
         self.sched.submit(req)
+        self._plan_gen += 1  # new work invalidates a speculatively staged plan
 
     def on_online_arrival(self, req: Request) -> None:
         """Streaming-API entry: may trip the preemption flag (Algorithm 2).
@@ -361,6 +554,7 @@ class RealEngine:
             raise ValueError("real engine requires prompt token ids")
         if self.sched.on_online_arrival(req, self._clock()):
             self.flag.set()
+        self._plan_gen += 1  # new work invalidates a speculatively staged plan
 
     def _on_safepoint(self, seg_idx: int) -> None:
         if self.arrival_poll is not None:
@@ -419,7 +613,12 @@ class RealEngine:
                 list(dev_blocks) + [self._scratch_block] * (pad - n), np.int32
             )
         )
-        staged = jax.device_get(self._extract_jit(self.pools, ids))
+        if self.pipeline:
+            staged = jax.device_get(
+                self._extract_segs_jit(tuple(self._pool_segs), ids)
+            )
+        else:
+            staged = jax.device_get(self._extract_jit(self.pools, ids))
         return [
             {
                 pos: {"k": b["k"][:, i], "v": b["v"][:, i]}
@@ -449,7 +648,20 @@ class RealEngine:
             }
             for pos in stored[0]
         }
-        self.pools = self._restore_jit(self.pools, ids, batched)
+        if self.pipeline:
+            # _restore_segs_jit donated the old slices; park the displaced
+            # references until the hold resolves (see _drop_retired).  The
+            # witness is a scalar gather enqueued after the restore — the
+            # restored slices themselves get donated onward, so they can't
+            # witness their own retirement.
+            displaced = self._pool_segs
+            self._pool_segs = list(
+                self._restore_segs_jit(tuple(displaced), ids, batched)
+            )
+            witness = jax.tree.leaves(self._pool_segs[0])[0][0, 0, 0, 0, 0]
+            self._retired.append((witness, displaced))
+        else:
+            self.pools = self._restore_jit(self.pools, ids, batched)
 
     # ------------------------------------------------------ contiguous layout
     def _fresh_cache(self, req: Request) -> Any:
@@ -489,6 +701,13 @@ class RealEngine:
 
     # ---------------------------------------------------------------- events
     def _process_events(self) -> None:
+        if self._ckpt_pending and any(
+            kind == "resume" for kind, _r, _p in self.sched.events
+        ):
+            # a resume reads the host store; in-flight async checkpoint
+            # copies must land first or restored KV silently goes missing
+            # (the scheduler already counted those blocks as recoverable)
+            self._resolve_ckpt_pending()
         for kind, req, payload in self.sched.events:
             rid = req.request_id
             if kind in ("preempt_discard", "preempt_swap"):
@@ -536,6 +755,8 @@ class RealEngine:
     # ------------------------------------------------------------------ step
     def step(self) -> bool:
         """One engine iteration. Returns False when no work remains."""
+        if self.pipeline:
+            return self._step_pipelined()
         now = self._clock()
         sched = self.sched
         plan = sched.plan_iteration(now)
@@ -593,22 +814,69 @@ class RealEngine:
                 self.host.drop_seq(sid)
 
         if not aborted:
-            executed_offline = [
-                r for r in plan.decode_reqs if not r.is_online
-            ] + [c.request for c in plan.prefill_chunks if not c.request.is_online]
-            self.ckpt.mark(executed_offline)
-            chosen = self.ckpt.plan(io_budget_blocks=1 << 30)
-            if self.paged:
-                if chosen:
-                    stored = self._extract_blocks_paged([c[2] for c in chosen])
-                    for (seq_id, idx, _dev, _host), blk in zip(chosen, stored):
-                        self.host.put(seq_id, idx, blk)
-            else:
-                for seq_id, idx, _dev, _host in chosen:
-                    cache = self.caches.get(seq_id)
-                    if cache is not None:
-                        self.host.put(seq_id, idx, self._extract_block(cache, idx))
+            self._checkpoint_after(plan)
         return True
+
+    def _checkpoint_after(self, plan) -> None:
+        """Post-iteration incremental checkpointing (shared by both step
+        paths): mark the offline sequences that just executed, pick blocks,
+        and copy them to the host store.  The serial engine copies
+        synchronously; the pipelined engine only *enqueues* the jitted
+        gather (device order puts it after this iteration's KV scatters)
+        and fetches it next step, off the critical path (§13)."""
+        executed_offline = [
+            r for r in plan.decode_reqs if not r.is_online
+        ] + [c.request for c in plan.prefill_chunks if not c.request.is_online]
+        self.ckpt.mark(executed_offline)
+        chosen = self.ckpt.plan(io_budget_blocks=1 << 30)
+        if not chosen:
+            return
+        if self.paged:
+            if self.pipeline:
+                n = len(chosen)
+                pad = self._decode_bucket(n)
+                ids = self._put(
+                    np.asarray(
+                        [c[2] for c in chosen]
+                        + [self._scratch_block] * (pad - n),
+                        np.int32,
+                    )
+                )
+                staged = self._extract_segs_jit(tuple(self._pool_segs), ids)
+                for leaf in jax.tree.leaves(staged):
+                    try:
+                        leaf.copy_to_host_async()
+                    except Exception:
+                        pass
+                self._ckpt_pending.append((chosen, staged))
+            else:
+                stored = self._extract_blocks_paged([c[2] for c in chosen])
+                for (seq_id, idx, _dev, _host), blk in zip(chosen, stored):
+                    self.host.put(seq_id, idx, blk)
+        else:
+            for seq_id, idx, _dev, _host in chosen:
+                cache = self.caches.get(seq_id)
+                if cache is not None:
+                    self.host.put(seq_id, idx, self._extract_block(cache, idx))
+
+    def _resolve_ckpt_pending(self) -> None:
+        """Land in-flight async checkpoint copies in the host store.  A
+        sequence freed since the gather was enqueued (it finished in the
+        meantime) is skipped — its host entries were already dropped."""
+        for chosen, staged in self._ckpt_pending:
+            staged = jax.device_get(staged)
+            for i, (seq_id, idx, _dev, _host) in enumerate(chosen):
+                if not self.blocks.has_seq(seq_id):
+                    continue
+                self.host.put(
+                    seq_id,
+                    idx,
+                    {
+                        pos: {"k": b["k"][:, i], "v": b["v"][:, i]}
+                        for pos, b in staged.items()
+                    },
+                )
+        self._ckpt_pending.clear()
 
     # ------------------------------------------------- fused ragged execution
     def _build_ragged(self, items: List[tuple]) -> Dict[str, np.ndarray]:
@@ -686,22 +954,20 @@ class RealEngine:
             self._put(a["logit_idx"]),
         )
 
-    def _dispatch_fused(self, toks, tables, positions, meta, logit_idx,
-                        preemptible: bool):
-        """Run the fused stack: embed, then ONE dispatch per K-layer
-        segment (host-side safepoint cuts between them when the plan is
-        abortable), then the S-row logits program.  Returns
-        (logits | None, aborted)."""
-        x = tf.embed(self.cfg, self.params, toks[None])
+    def _run_segments(self, x, seg_fn, counter: str, preemptible: bool):
+        """Shared segment-closure scaffolding for every segmented program
+        (the fused ragged stack and the split paged decode): one jitted
+        dispatch per K-layer segment with host-side safepoint cuts between
+        them (DESIGN.md §9/§12).  ``seg_fn(lo, pps, x) -> x``; the closure
+        owns its pool bookkeeping (whole-pool rebind for serial engines,
+        per-segment slice swap for pipelined ones).  Returns
+        ``(x | None, aborted)``; on abort the flag is consumed."""
         state = {"x": x}
 
         def make_seg(lo, pps):
             def run():
-                self.dispatches["fused_segment"] += 1
-                state["x"], self.pools = self._fused_segment_jit(
-                    pps, np.int32(lo), state["x"], self.pools, tables,
-                    positions, meta,
-                )
+                self.dispatches[counter] += 1
+                state["x"] = seg_fn(lo, pps, state["x"])
 
             return run
 
@@ -713,8 +979,134 @@ class RealEngine:
         if not completed:
             self.flag.clear()
             return None, True
+        return state["x"], False
+
+    def _dispatch_fused(self, toks, tables, positions, meta, logit_idx,
+                        preemptible: bool):
+        """Run the fused stack: embed, then ONE dispatch per K-layer
+        segment (host-side safepoint cuts between them when the plan is
+        abortable), then the S-row logits program.  Returns
+        (logits | None, aborted)."""
+        if self._t_last_enqueue is not None:
+            gap = time.perf_counter() - self._t_last_enqueue
+            out, self._last_out = self._last_out, None
+            if out is not None and not out.is_ready():
+                # the device still had queued work when this batch was
+                # handed over: zero observable idle (§13)
+                gap = 0.0
+            self._t_last_enqueue = None
+            self.host_gap_s.append(gap)
+            self.host_gap_count += 1
+            self.host_gap_seconds += gap
+        x = tf.embed(self.cfg, self.params, toks[None])
+        if self.pipeline:
+            # per-segment split pools (§13): each segment program donates
+            # its OWN period slice, whose previous donation hold (the same
+            # segment, one iteration ago) retired long before this enqueue
+            # — so the enqueue never waits, the update is in-place, and no
+            # merge or extra pool traffic exists.  The displaced slice
+            # reference is parked with the segment's activation output as
+            # witness (never donated, defined by the donating program).
+            # An abort leaves partial slice updates in place, which is
+            # sound for the same reason the serial donated path is: writes
+            # at uncommitted positions are rewritten verbatim on
+            # re-execution (§12).
+            idx = {"i": 0}
+
+            def seg(lo, pps, h):
+                i = idx["i"]
+                idx["i"] += 1
+                old = self._pool_segs[i]
+                h, self._pool_segs[i] = self._fused_segment_seg_jit(
+                    pps, np.int32(lo), h, old, tables, positions, meta
+                )
+                self._retired.append((h, old))
+                return h
+
+            x, aborted = self._run_segments(x, seg, "fused_segment",
+                                            preemptible)
+            if aborted:
+                return None, True
+            self.dispatches["fused_logits"] += 1
+            logits = self._fused_logits_jit(x, logit_idx)
+            self._drop_retired()
+            return logits, False
+        else:
+
+            def seg(lo, pps, h):
+                h, self.pools = self._fused_segment_jit(
+                    pps, np.int32(lo), h, self.pools, tables, positions, meta
+                )
+                return h
+
+            x, aborted = self._run_segments(x, seg, "fused_segment",
+                                            preemptible)
+            if aborted:
+                return None, True
         self.dispatches["fused_logits"] += 1
-        return self._fused_logits_jit(state["x"], logit_idx), False
+        return self._fused_logits_jit(x, logit_idx), False
+
+    def _build_fused(self, plan) -> Tuple[List[tuple], tuple]:
+        """Lower an ``IterationPlan`` to device-ready fused inputs.
+
+        Returns ``(samplers, (toks, tables, positions, meta, logit_idx))``
+        where ``samplers`` is the ``(sequence row, request)`` list whose
+        logit rows must be sampled after the dispatch.
+
+        Pipelined engine only (§13): a decode row whose latest token is
+        still in flight (sampled last iteration, not yet fetched) gets a
+        placeholder slot in the flat token array, patched by ONE jitted
+        ``inject_sampled`` scatter reading straight from the pending
+        device sample buffer — speculation never blocks on token values.
+        The injection index/row lists pad to a power-of-two bucket by
+        *repeating* a real pair, which is idempotent under ``.at[].set``
+        (the padded slot at ``t_pad - 1`` may be a real token when the
+        batch exactly fills its bucket, so padding with it is unsafe)."""
+        pend: Dict[int, int] = {}
+        if self._fetches:
+            latest = self._fetches[-1]
+            pend = {r.request_id: i for i, r in enumerate(latest.reqs)}
+        items: List[tuple] = []
+        samplers: List[tuple] = []  # (sequence row, request) to sample
+        inj: List[tuple] = []  # (flat token slot, row in pending samples)
+        start = 0
+        for c in plan.prefill_chunks:
+            toks = self._tokens_of(c.request)[c.offset : c.offset + c.length]
+            items.append(
+                (c.length, c.offset, toks,
+                 self._block_table(c.request.request_id))
+            )
+            if (
+                c.offset + c.length == c.request.kv_target
+                and c.request.num_generated == 0
+            ):
+                samplers.append((len(items) - 1, c.request))
+            start += c.length
+        for r in plan.decode_reqs:
+            row = pend.get(r.request_id)
+            if row is None:
+                tok = self._tokens_of(r)[-1:]
+            else:
+                tok = np.zeros((1,), np.int32)  # injected on device below
+                inj.append((start, row))
+            items.append(
+                (1, r.total_len - 1, tok, self._block_table(r.request_id))
+            )
+            samplers.append((len(items) - 1, r))
+            start += 1
+        inputs = self._fused_inputs(self._build_ragged(items))
+        if inj:
+            toks_d, tables, positions, meta, li = inputs
+            pad = pow2_bucket(len(inj))
+            inj = inj + [inj[-1]] * (pad - len(inj))
+            toks_d = self._inject_jit(
+                toks_d,
+                self._put(np.asarray([i for i, _ in inj], np.int32)),
+                self._fetches[-1].arr,
+                self._put(np.asarray([r for _, r in inj], np.int32)),
+            )
+            inputs = (toks_d, tables, positions, meta, li)
+        return samplers, inputs
 
     def _run_fused(
         self, plan, preemptible: bool, tokens: Dict[int, int]
@@ -727,29 +1119,8 @@ class RealEngine:
         token runs to completion (it is budget-bounded by construction).
         Returns True if the iteration aborted at a safepoint.
         """
-        items: List[tuple] = []
-        samplers: List[tuple] = []  # (sequence row, request) to sample
-        for c in plan.prefill_chunks:
-            toks = self._tokens_of(c.request)[c.offset : c.offset + c.length]
-            items.append(
-                (c.length, c.offset, toks,
-                 self._block_table(c.request.request_id))
-            )
-            if (
-                c.offset + c.length == c.request.kv_target
-                and c.request.num_generated == 0
-            ):
-                samplers.append((len(items) - 1, c.request))
-        for r in plan.decode_reqs:
-            items.append(
-                (1, r.total_len - 1, self._tokens_of(r)[-1:],
-                 self._block_table(r.request_id))
-            )
-            samplers.append((len(items) - 1, r))
-        logits, aborted = self._dispatch_fused(
-            *self._fused_inputs(self._build_ragged(items)),
-            preemptible=preemptible,
-        )
+        samplers, inputs = self._build_fused(plan)
+        logits, aborted = self._dispatch_fused(*inputs, preemptible=preemptible)
         if aborted:
             return True
         if samplers:
@@ -758,7 +1129,168 @@ class RealEngine:
             toks = np.asarray(sample(logits[rows], self.sampling, sk))
             for (_, r), t in zip(samplers, toks):
                 tokens[r.request_id] = int(t)
+            self._last_out = None  # the readback above drained the device
+        else:
+            self._last_out = logits  # queue may still be busy
+        self._t_last_enqueue = time.perf_counter()
         return False
+
+    # ------------------------------------- async host/device pipeline (§13)
+    def _step_pipelined(self) -> bool:
+        """One iteration of the pipelined engine (DESIGN.md §13).
+
+        Dispatches the batch staged by the previous step's speculation
+        (falling back to serial plan+build when there is none or it went
+        stale), enqueues sampling as a device step with an asynchronous
+        readback, commits the iteration *structurally* (token counts now,
+        token values backfilled by the pending fetch), then speculatively
+        plans and builds the NEXT iteration while this one still runs on
+        device.
+
+        Soundness: safepoint checks are host-side cuts between segment
+        enqueues, so once every segment is enqueued the iteration can no
+        longer abort — committing at enqueue time observes exactly the
+        outcomes the serial engine commits after blocking.  An abort
+        discards only the current (pure-offline) iteration, same as
+        serial; the staged next batch was already consumed above, and no
+        new one is staged on the abort path, so replanning sees the
+        post-abort scheduler state."""
+        now = self._clock()
+        sched = self.sched
+        staged, self._staged = self._staged, None
+        if staged is not None and staged.gen != self._plan_gen:
+            # an arrival landed after staging: Algorithm 2 must see it, so
+            # roll the scheduler back and replan serially below
+            sched.restore(staged.snap)
+            self.pipeline_discards += 1
+            staged = None
+        if staged is None:
+            # serial (non-overlapped) turn: first iteration, after an
+            # abort/idle stretch, or a discarded staged batch.  Token
+            # values are needed on host to build decode inputs.
+            self._resolve_fetches()
+            if self._t_last_enqueue is not None:
+                # the readbacks above drained the device queue: restart the
+                # gap clock here so this turn's sample measures plan+build
+                # time (exactly the serial engine's gap), not device compute
+                self._t_last_enqueue = time.perf_counter()
+                self._last_out = None
+            plan = sched.plan_iteration(now)
+            self._process_events()
+            if plan.empty:
+                self.flush_pipeline()
+                self._t_last_enqueue = None
+                self._last_out = None
+                return bool(
+                    sched.online_q or sched.offline_q
+                    or sched.running or sched.preempted
+                )
+            samplers, inputs = self._build_fused(plan)
+        else:
+            plan, samplers, inputs = staged.plan, staged.samplers, staged.inputs
+            # Algorithm 2's in-flight estimate measures from dispatch time,
+            # not staging time
+            sched.t_sched = now
+            self._process_events()
+        self.steps += 1
+
+        preemptible = (
+            plan.pure_offline
+            and self.ec.enable_safepoints
+            and sched.sc.preempt_running
+        )
+        if not preemptible:
+            self.flag.clear()
+        logits, aborted = self._dispatch_fused(*inputs, preemptible=preemptible)
+        if aborted:
+            sched.commit(plan, self._clock(), aborted=True, tokens={})
+            return True
+
+        if samplers:
+            rows = [i for i, _ in samplers]
+            pad = pow2_bucket(len(rows))
+            rows_arr = self._put(
+                np.asarray(rows + [rows[-1]] * (pad - len(rows)), np.int32)
+            )
+            self._key, sk = jax.random.split(self._key)
+            sampled = self._sample_jit(logits, rows_arr, sk)
+            self._fetches.append(
+                _PendingFetch(sampled, [r for _, r in samplers])
+            )
+            self._last_out = sampled
+        else:
+            self._last_out = logits
+        self._t_last_enqueue = time.perf_counter()
+        # structural commit at enqueue time: every safepoint has passed, so
+        # this iteration can no longer abort; tokens=None counts generated
+        # tokens without values (record_token(None)), the pending fetch
+        # backfills output_tokens before anything on host reads them
+        sched.commit(plan, self._clock(), aborted=False, tokens=None)
+
+        # All remaining post-work runs BEFORE the speculation snapshot so a
+        # rollback only ever reverts the speculative plan's own mutations.
+        self._resolve_ckpt_pending()
+        self._checkpoint_after(plan)
+        self._resolve_fetches(keep_latest=True)
+        for sid in self.host.seq_ids():
+            if not self.blocks.has_seq(sid):
+                self.host.drop_seq(sid)
+        self._speculate()
+        return True
+
+    def _speculate(self) -> None:
+        """Plan + host-build iteration N+1 while N runs on device (§13).
+
+        The scheduler snapshot makes the plan *previewable*: every host
+        mutation planning performs (admissions, block growth, preemption,
+        resume, event emission) rolls back via ``restore`` if the staged
+        batch is invalidated before dispatch.  Device work enqueued for
+        the staged batch (input transfers, the token injection) simply
+        goes unread on discard."""
+        snap = self.sched.snapshot()
+        plan = self.sched.plan_iteration(self._clock())
+        if plan.empty:
+            self.sched.restore(snap)
+            return
+        samplers, inputs = self._build_fused(plan)
+        self._staged = _StagedBatch(plan, snap, self._plan_gen, samplers, inputs)
+
+    def _resolve_fetches(self, keep_latest: bool = False) -> None:
+        """Backfill ``Request.output_tokens`` from pending sample fetches,
+        oldest first.  ``keep_latest`` leaves the newest fetch in flight —
+        the steady-state step keeps exactly one (the iteration still on
+        device), which speculation reads via device-side injection."""
+        keep = 1 if keep_latest else 0
+        while len(self._fetches) > keep:
+            self._fetches.popleft().resolve()
+        self._drop_retired()
+
+    def _drop_retired(self) -> None:
+        """Release displaced pool buffers whose donation hold has resolved.
+
+        A buffer donated to a still-pending program must keep a live
+        Python reference: on the CPU client, deleting it blocks the host
+        until the donating computation retires — the same stall the
+        pipeline exists to remove.  Each retired entry carries a witness
+        (the donating program's output); once the witness is ready the
+        hold has resolved and the drop is instant.  Bounded by pipeline
+        depth: one entry per in-flight iteration."""
+        while self._retired and self._retired[0][0].is_ready():
+            self._retired.popleft()
+
+    def flush_pipeline(self) -> None:
+        """Drain every asynchronous artifact of the pipelined engine:
+        pending sampled-token fetches (backfilling output_tokens),
+        in-flight checkpoint copies, and retired donated pool buffers.
+        Idempotent; a no-op on serial engines.  Runs automatically when a
+        step finds no work; the wall-clock runtime also calls it at
+        replay end / stop so metrics and emitted tokens are complete
+        (DESIGN.md §13)."""
+        self._resolve_fetches()
+        self._resolve_ckpt_pending()
+        if self._retired:
+            jax.block_until_ready(self._retired[-1][0])
+            self._retired.clear()
 
     # --------------------------------------------------------------- prefill
     def _prefill_paged_batched(
@@ -921,27 +1453,17 @@ class RealEngine:
         overwritten verbatim on re-execution."""
         x = tf.embed(self.cfg, self.params, last[:, None])
         positions = positions_1d[:, None]
-        state = {"x": x}
 
-        def make_seg(lo, pps):
-            def run():
-                self.dispatches["segment"] += 1
-                state["x"], self.pools = self._segment_jit(
-                    pps, np.int32(lo), state["x"], self.pools, tables,
-                    positions,
-                )
+        def seg(lo, pps, h):
+            h, self.pools = self._segment_jit(
+                pps, np.int32(lo), h, self.pools, tables, positions
+            )
+            return h
 
-            return run
-
-        completed, _done = self.safepoints.run(
-            [make_seg(lo, pps) for lo, pps in tf.segment_spans(self.cfg)],
-            preemptible=True,
-            on_safepoint=self._on_safepoint,
-        )
-        if not completed:
-            self.flag.clear()
+        x, aborted = self._run_segments(x, seg, "segment", True)
+        if aborted:
             return None, True
-        logits = tf.lm_head(self.cfg, self.params, state["x"])[:, 0, :]
+        logits = tf.lm_head(self.cfg, self.params, x)[:, 0, :]
         return logits, False
 
     def _decode_contiguous(self, reqs: List[Request], use_safepoints: bool):
@@ -1051,6 +1573,10 @@ class RealEngine:
                 prefill_batches=tuple(pbatches) if self.paged else (1,),
                 decode_buckets=tuple(buckets),
                 token_buckets=(tok0, 2 * tok0) if self.fused else (),
+                # pipelined engines serve back-to-back enqueues, so the
+                # profile must price that steady state, not the serial
+                # enqueue->block->enqueue path they never run (§13)
+                pipeline_depth=4 if self.pipeline else 1,
             )
 
         def timed(fn) -> float:
@@ -1073,33 +1599,69 @@ class RealEngine:
             # paths cannot express.  Probes address only the scratch row.
             scratch = self._scratch_block
 
-            def _probe(items) -> Callable[[], None]:
+            def _probe(items) -> Callable[..., Any]:
                 toks, tables, positions, meta, li = self._fused_inputs(
                     self._build_ragged(items)
                 )
                 spans = tf.segment_spans(self.cfg)
 
-                def once():
+                def once(block: bool = True):
                     x = tf.embed(self.cfg, self.params, toks[None])
-                    for lo, pps in spans:
-                        x, self.pools = self._fused_segment_jit(
-                            pps, np.int32(lo), x, self.pools, tables,
-                            positions, meta,
-                        )
-                    jax.block_until_ready(
-                        self._fused_logits_jit(x, li)
-                    )
+                    if self.pipeline:
+                        for i, (lo, pps) in enumerate(spans):
+                            old = self._pool_segs[i]
+                            x, self._pool_segs[i] = (
+                                self._fused_segment_seg_jit(
+                                    pps, np.int32(lo), x, old, tables,
+                                    positions, meta,
+                                )
+                            )
+                            self._retired.append((x, old))
+                    else:
+                        for lo, pps in spans:
+                            x, self.pools = self._fused_segment_jit(
+                                pps, np.int32(lo), x, self.pools, tables,
+                                positions, meta,
+                            )
+                    out = self._fused_logits_jit(x, li)
+                    if block:
+                        jax.block_until_ready(out)
+                        self._drop_retired()
+                    return out
 
                 return once
+
+            def timed_fused(once) -> float:
+                """Time one fused probe at ``grid.pipeline_depth``.  Depth 1
+                is the serial engine's enqueue->block cadence; depth > 1
+                enqueues that many iterations back-to-back and blocks once
+                at the end, so the per-iteration figure prices the
+                *pipelined steady state* — host gaps overlapped with device
+                compute — which is what the pipelined engine's scheduler
+                budgets must reflect (DESIGN.md §13)."""
+                depth = max(1, grid.pipeline_depth)
+                if depth == 1:
+                    return timed(once)
+                for _ in range(grid.warmup):
+                    once()
+                best = float("inf")
+                for _ in range(grid.repeats):
+                    t0 = time.perf_counter()
+                    out = None
+                    for _ in range(depth):
+                        out = once(block=False)
+                    jax.block_until_ready(out)
+                    best = min(best, (time.perf_counter() - t0) / depth)
+                return best
 
             def prefill_timer(b: int, c: int) -> float:
                 b = self._decode_bucket(b)
                 c = self._chunk_bucket(min(c, max_ctx))
-                return timed(_probe([(c, 0, None, None)] * b))
+                return timed_fused(_probe([(c, 0, None, None)] * b))
 
             def decode_timer(b: int, ctx: int) -> float:
                 ctx = max(1, min(ctx, max_ctx - 1))
-                return timed(_probe([(1, ctx, None, None)] * b))
+                return timed_fused(_probe([(1, ctx, None, None)] * b))
 
             def fused_timer(tok: int, kv: int):
                 c = min(self.sched.sc.chunk_size, max_ctx, tok)
@@ -1117,7 +1679,7 @@ class RealEngine:
                     decode_ctx=ndec * kv,
                     num_seqs=1 + ndec,
                 )
-                return shape, timed(_probe(items))
+                return shape, timed_fused(_probe(items))
 
             def swap_timer(n: int):
                 nbytes = n * block_bytes(self.cfg, self.ec.block_size)
@@ -1220,3 +1782,7 @@ class RealEngine:
         for _ in range(limit):
             if not self.step():
                 break
+        if self.pipeline:
+            # a step limit can stop the loop mid-flight; emitted tokens and
+            # host-store contents must still be complete (§13)
+            self.flush_pipeline()

@@ -11,6 +11,15 @@ K-layer segment dispatches of a pure-offline batch — an online request that
 lands on the API thread mid-batch is seen at the next *real* safepoint,
 Algorithm 2 runs there, and the batch aborts if TTFT is endangered.
 
+Pipelined engines (``RealEngineConfig.pipeline``, DESIGN.md §13) need no
+special-casing here: every delivery path goes through the engine's own
+``submit`` / ``on_online_arrival``, which bump its plan generation, so a
+speculatively staged batch is discarded and replanned at the next step —
+the drain hooks cooperate with speculation for free.  The runtime's only
+extra duty is ``_flush_engine`` at replay end / ``stop``, which drains the
+engine's asynchronous artifacts (pending sampled-token readbacks and
+checkpoint copies) so metrics and emitted tokens are complete.
+
 Two ways to feed it:
 
 * ``replay(trace)`` — single-threaded trace replay: requests carry
@@ -172,6 +181,14 @@ class CoServingRuntime:
                 continue
             self.stats.arrivals_delivered += 1
 
+    def _flush_engine(self) -> None:
+        """Drain the engine's asynchronous pipeline artifacts (pending
+        sampled-token fetches, in-flight checkpoint copies) before metrics
+        are read.  No-op for engines without a pipeline (§13)."""
+        flush = getattr(self.engine, "flush_pipeline", None)
+        if flush is not None:
+            flush()
+
     def _observe_aborts(self) -> None:
         aborts = self.engine.safepoints.stats.preemptions
         if aborts > self._aborts_seen:
@@ -230,6 +247,7 @@ class CoServingRuntime:
                         self._sleep(gap)
                     continue
                 break
+        self._flush_engine()
         self.duration = self.now()
         return self.metrics()
 
@@ -277,6 +295,7 @@ class CoServingRuntime:
         self._stop.set()
         self._thread.join(timeout=timeout)
         self._thread = None
+        self._flush_engine()
         self.duration = self.now()
 
     # -------------------------------------------------------------- metrics

@@ -1,7 +1,7 @@
 """Differential token-identity harness across execution backends.
 
-One trace, four executions of RealEngine — they must emit byte-identical
-greedy tokens (DESIGN.md §11/§12):
+One trace, five executions of RealEngine — they must emit byte-identical
+greedy tokens (DESIGN.md §11/§12/§13):
 
   * ``contiguous``   — per-request stacked caches (the §4 fallback layout),
   * ``split paged``  — shared block pool, per-family dispatches
@@ -9,6 +9,10 @@ greedy tokens (DESIGN.md §11/§12):
   * ``fused paged``  — the same pool, every iteration lowered to ONE
                        ragged token batch (prefill chunks + decodes) and
                        dispatched once per K-layer segment (§12),
+  * ``pipelined``    — the fused path with the async host/device pipeline
+                       on (§13): speculative plan+build of iteration N+1
+                       overlapped with N, deferred-token injection, async
+                       sampled-token readback,
   * ``sharded fused``— the fused path over a tensor-parallel serving
                        mesh (``launch.mesh.make_serving_mesh``).
 
@@ -108,19 +112,25 @@ def test_backends_emit_identical_tokens(arch, jobs, preempt_step, eng_kw):
                                eng_kw=dict(eng_kw, fused_batch=False))
     out_f, on_f, reqs_f = _run(arch, "paged", jobs, preempt_step,
                                eng_kw=eng_kw)
+    out_l, on_l, reqs_l = _run(arch, "paged", jobs, preempt_step,
+                               eng_kw=dict(eng_kw, pipeline=True))
     out_s, on_s, reqs_s = _run(arch, "paged", jobs, preempt_step,
                                mesh=make_serving_mesh(_tp()), eng_kw=eng_kw)
     assert [len(o) for o in out_p] == [g for _, g in jobs]
     assert out_p == out_c, "split paged backend diverged from contiguous"
     assert out_f == out_p, "fused ragged path diverged from split paged"
+    assert out_l == out_f, "pipelined engine diverged from serial fused"
     assert out_s == out_f, "sharded fused backend diverged from single-device"
-    assert on_s == on_f == on_p == on_c, "online request tokens diverged"
+    assert on_l == on_s == on_f == on_p == on_c, (
+        "online request tokens diverged"
+    )
     if preempt_step is not None:
         # the scenario must actually exercise preempt/resume, identically
         # in all paged legs (the block manager is dispatch-oblivious)
         npre = sum(r.num_preemptions for r in reqs_p)
         assert npre > 0, "preemption scenario did not preempt"
         assert sum(r.num_preemptions for r in reqs_f) == npre
+        assert sum(r.num_preemptions for r in reqs_l) == npre
         assert sum(r.num_preemptions for r in reqs_s) == npre
 
 
@@ -163,6 +173,53 @@ def test_fused_mid_iteration_abort_is_exact():
 
     assert tf.num_segments(cfg) > 1, "config cannot express a mid-batch cut"
     assert _go(3) == _go(None), "abort changed the emitted tokens"
+
+
+def test_pipelined_mid_iteration_abort_discards_staged_batch():
+    """Safepoint abort on the PIPELINED engine (DESIGN.md §13): the
+    aborted iteration is itself a speculatively staged batch — planned and
+    host-built while the previous iteration ran on device.  The abort must
+    throw it away exactly like the serial engine discards an in-flight
+    batch (commit skipped, requests stay schedulable) and must not stage a
+    successor, so the next turn replans serially against the post-abort
+    scheduler state; the run must still emit byte-identical tokens."""
+    cfg, params = _model("llama-2-7b")
+    jobs = [(40, 8)] * 3
+
+    def _go(abort_at_step):
+        eng = RealEngine(
+            cfg, params,
+            eng_cfg=RealEngineConfig(backend="paged", pipeline=True),
+        )
+        reqs = [
+            _mkreq(cfg, Priority.OFFLINE, plen, gen, seed)
+            for seed, (plen, gen) in enumerate(jobs)
+        ]
+        for r in reqs:
+            eng.submit(r)
+        if abort_at_step is not None:
+            for _ in range(abort_at_step):
+                eng.step()
+            # the batch about to dispatch was staged by the previous
+            # step's speculation — the abort discards exactly that batch
+            assert eng._staged is not None, "pipeline never staged a batch"
+            eng.arrival_poll = lambda: eng.flag.set()
+            before = eng.dispatches["fused_segment"]
+            eng.step()
+            assert eng.safepoints.stats.preemptions == 1, "no abort happened"
+            assert (
+                eng.dispatches["fused_segment"] - before
+                < tf.num_segments(cfg)
+            ), "aborted iteration ran every segment"
+            assert eng._staged is None, "abort path must not speculate"
+            eng.arrival_poll = None
+        eng.run()
+        return [r.output_tokens for r in reqs]
+
+    assert tf.num_segments(cfg) > 1, "config cannot express a mid-batch cut"
+    assert _go(3) == _go(None), (
+        "pipelined abort changed the emitted tokens"
+    )
 
 
 def test_sharded_pool_is_actually_sharded():

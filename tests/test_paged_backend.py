@@ -8,6 +8,8 @@
  * decode jit recompilation bounded by the batch-bucket count (split path)
  * fused-path jit recompilation bounded by the ragged bucket triple
    (DESIGN.md §12) and one dispatch per K-layer segment per iteration
+ * pipelined-engine twin of the fused retrace guard (DESIGN.md §13):
+   pinned fused/pipeline trace counts plus monotone host-gap counters
 """
 import jax
 import jax.numpy as jnp
@@ -375,3 +377,56 @@ def test_fused_retrace_regression_guard_mixed_onoff_drain():
         f"fused retraces changed: {eng.fused_trace_count} (was 5); "
         "did a dispatch change break (token x seq x qlen) bucketing?"
     )
+
+
+def test_pipelined_retrace_regression_guard_mixed_onoff_drain():
+    """Pipelined twin of the fused drain guard (DESIGN.md §13): the same
+    workload on the async-pipeline engine must keep the per-segment
+    program's retraces pinned (same ragged bucket triple as the serial
+    fused path — speculation and deferred-token injection must not leak
+    new trace keys) and the pipeline's own programs (sample_rows /
+    inject_sampled) bounded by their row buckets.  Also asserts the
+    fusion contract under pipelining — one donated per-slice dispatch
+    per K-layer segment per iteration, split paths never run — and that
+    the host-gap counters are monotone and mutually consistent."""
+    eng = RealEngine(
+        CFG, PARAMS,
+        eng_cfg=RealEngineConfig(
+            backend="paged", enable_safepoints=False, pipeline=True
+        ),
+    )
+    gens = (4, 6, 8, 10, 12)
+    plens = (40, 24, 40, 10, 40)
+    for s, (p, g) in enumerate(zip(plens, gens)):
+        eng.submit(mkreq(Priority.OFFLINE, p, g, s))
+    for _ in range(4):
+        eng.step()
+    gap_count_mid = eng.host_gap_count
+    gap_seconds_mid = eng.host_gap_seconds
+    for s in range(3):
+        eng.on_online_arrival(mkreq(Priority.ONLINE, 60, 8, 100 + s))
+    eng.run()
+    from repro.models import transformer as tf
+
+    assert eng.dispatches["fused_segment"] == eng.steps * tf.num_segments(
+        CFG
+    ), "an iteration did not execute as one dispatch per K-layer segment"
+    assert eng.dispatches["fused_logits"] == eng.steps
+    assert eng.dispatches["prefill"] == eng.dispatches["decode"] == 0, (
+        "pipelined engine dispatched a split-path program"
+    )
+    assert eng.fused_trace_count == 5, (
+        f"pipelined fused retraces changed: {eng.fused_trace_count} "
+        "(was 5); did speculation leak new (token x seq x qlen) keys?"
+    )
+    assert eng.pipeline_trace_count == 8, (
+        f"pipeline program retraces changed: {eng.pipeline_trace_count} "
+        "(was 8); did sample-row / injection bucketing break?"
+    )
+    # host-gap instrumentation: counters are monotone (never reset) and
+    # stay consistent with the per-iteration sample list
+    assert eng.host_gap_count >= gap_count_mid
+    assert eng.host_gap_seconds >= gap_seconds_mid
+    assert eng.host_gap_count == len(eng.host_gap_s)
+    assert eng.host_gap_seconds == pytest.approx(sum(eng.host_gap_s))
+    assert all(g >= 0.0 for g in eng.host_gap_s)
