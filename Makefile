@@ -2,7 +2,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test test-all test-sharded bench bench-fused bench-wallclock bench-sharded docs-check
+.PHONY: test test-all test-sharded bench bench-fused bench-prefix bench-wallclock bench-sharded docs-check
 
 # fast default: slow system/wallclock/numerics tests excluded (marker
 # `slow`, registered in pytest.ini); `make test-all` is the escape hatch
@@ -25,6 +25,12 @@ bench:
 # refreshes the in-repo perf trajectory file BENCH_fused_batch.json
 bench-fused:
 	python -m benchmarks.fused_batch_bench
+
+# shared-prefix KV cache: cached vs uncached shared-system-prompt drain
+# (DESIGN.md §14); refreshes BENCH_prefix_cache.json and fails unless the
+# cached leg computes <= half the uncached leg's prefill tokens
+bench-prefix:
+	python -m benchmarks.prefix_cache_bench --assert-prefill-reduction
 
 # real-execution co-serving on the wall clock (DESIGN.md §10)
 bench-wallclock:

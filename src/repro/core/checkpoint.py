@@ -77,6 +77,10 @@ class CheckpointStats:
     bytes_prefetched: int = 0
     free_discards: int = 0  # preemptions that cost zero I/O thanks to IC
     blocking_swap_outs: int = 0
+    # checkpoints of blocks with refcount > 1 (prefix sharing, §14): safe
+    # because a shared full block is immutable — any divergent writer is
+    # rerouted to a private copy by the COW barrier before its write lands
+    shared_block_checkpoints: int = 0
 
 
 class Checkpointer:
@@ -135,6 +139,13 @@ class Checkpointer:
         out = []
         for seq_id, idx in pending[:n]:
             dev, host = self.blocks.assign_checkpoint(seq_id, idx)
+            if self.blocks.block_refcount(dev) > 1:
+                # Sharing rule (DESIGN.md §14): checkpointing a shared block
+                # is sound — shared full blocks are immutable under COW — and
+                # each sharer keeps a *private* host copy, so one sequence's
+                # later divergence (which releases only its own checkpoint)
+                # can never invalidate another's restore path.
+                self.stats.shared_block_checkpoints += 1
             out.append((seq_id, idx, dev, host))
             total += 1
         self.stats.blocks_checkpointed += total

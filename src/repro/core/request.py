@@ -46,6 +46,12 @@ class Request:
     # tokens of KV recoverable from host checkpoints (set on preempt)
     host_recoverable: int = 0
 
+    # ---- prefix caching ----------------------------------------------------
+    # prompt tokens served from the shared-prefix index at admission
+    # (DESIGN.md §14); stays set after preemption as a stats field even
+    # though the mapped blocks are gone (resume recomputes from scratch)
+    prefix_cached: int = 0
+
     # ---- metrics -----------------------------------------------------------
     first_scheduled_time: Optional[float] = None
     first_token_time: Optional[float] = None  # TTFT = this - arrival_time

@@ -90,7 +90,7 @@ class SchedulerSnapshot:
     blocks: tuple  # BlockManager.snapshot()
     known_ids: set  # id() of every request known at snapshot time
     # (request, phase, num_prefilled, num_preemptions, host_recoverable,
-    #  first_scheduled_time) — the plan-mutable Request fields
+    #  first_scheduled_time, prefix_cached) — the plan-mutable Request fields
     req_state: List[tuple]
 
 
@@ -140,10 +140,12 @@ class UnifiedScheduler:
         self.preempt_flag: bool = False  # shared with the worker (Alg. 2)
         self._clock = clock or (lambda: 0.0)
         # engine hooks ----------------------------------------------------
-        # events: ("preempt_discard"|"preempt_swap"|"resume", req, payload)
-        # payload is the block-manager copy/free list for the transition
-        # (len == number of blocks moved); the real engine uses the physical
-        # ids, the sim engine only accounts the bytes.
+        # events: ("preempt_discard"|"preempt_swap"|"resume"|"cow", req,
+        # payload) — payload is the block-manager copy/free list for the
+        # transition (len == number of blocks moved); the real engine uses
+        # the physical ids, the sim engine only accounts the bytes.  "cow"
+        # carries (block_index, src, dst) copy-on-write triples the engine
+        # must realize on device before the iteration's KV writes (§14).
         self.events: List[Tuple[str, Request, list]] = []
         # gate for background swap-in admission (None = always allow)
         self.io_gate: Optional[Callable[[], bool]] = None
@@ -210,6 +212,43 @@ class UnifiedScheduler:
                 plan.preempted.append(victim)
         self.blocks.grow(req.request_id, new_total)
         return True
+
+    def _cow_for_write(
+        self,
+        req: Request,
+        lo: int,
+        hi: int,
+        plan: Optional[IterationPlan] = None,
+    ) -> bool:
+        """Copy-on-write barrier for this iteration's KV write to token
+        positions ``[lo, hi)``: blocks the request shares (refcount > 1)
+        are swapped for exclusive copies in its table, and a
+        ``("cow", req, pairs)`` event tells the engine which O(block)
+        device copies to issue *before* the batch dispatches
+        (DESIGN.md §14).  Preempts offline victims when the copies need
+        pool blocks, mirroring ``_ensure_blocks``.  Returns False if
+        memory cannot be found."""
+        planned_ids = set()
+        if plan is not None:
+            planned_ids = {r.request_id for r in plan.decode_reqs} | {
+                c.request.request_id for c in plan.prefill_chunks
+            }
+        while True:
+            try:
+                pairs = self.blocks.prepare_write(req.request_id, lo, hi)
+            except OutOfBlocks:
+                victim = self._pick_memory_victim(
+                    exclude=req, planned=planned_ids
+                )
+                if victim is None:
+                    return False
+                self._preempt_offline(victim)
+                if plan is not None:
+                    plan.preempted.append(victim)
+                continue
+            if pairs:
+                self.events.append(("cow", req, pairs))
+            return True
 
     def _pick_memory_victim(
         self, exclude: Request, planned: set
@@ -344,6 +383,8 @@ class UnifiedScheduler:
         for r in online_decode:
             if not self._ensure_blocks(r, r.total_len + 1, plan):
                 break  # pathological: memory full of online requests
+            if not self._cow_for_write(r, r.total_len - 1, r.total_len, plan):
+                break
             plan.decode_reqs.append(r)
             plan.shape = plan.shape.merge(decode_shape(r.total_len, self.cfg))
             scheduled += 1
@@ -374,6 +415,10 @@ class UnifiedScheduler:
             if r.phase == Phase.PREEMPTED:
                 continue  # became a memory victim earlier in this plan
             if not self._ensure_blocks(r, r.total_len + 1, plan):
+                self._preempt_offline(r)
+                plan.preempted.append(r)
+                continue
+            if not self._cow_for_write(r, r.total_len - 1, r.total_len, plan):
                 self._preempt_offline(r)
                 plan.preempted.append(r)
                 continue
@@ -420,6 +465,10 @@ class UnifiedScheduler:
                 continue
             if not self._ensure_blocks(r, r.num_prefilled + chunk, plan):
                 break
+            if not self._cow_for_write(
+                r, r.num_prefilled, r.num_prefilled + chunk, plan
+            ):
+                break
             plan.prefill_chunks.append(
                 PrefillChunk(r, offset=r.num_prefilled, length=chunk)
             )
@@ -442,25 +491,38 @@ class UnifiedScheduler:
             room = budget.remaining(scheduled)
             if room <= 0 or plan.shape.num_seqs >= budget.max_seqs:
                 break
+            if not self.blocks.has_seq(r.request_id):
+                # Registration consults the content index: a shared-prefix
+                # hit maps existing pool blocks into the new table and the
+                # request starts prefilling at the first uncached token —
+                # the plan prices only the suffix (DESIGN.md §14).
+                sb = self.blocks.register_seq(r.request_id, tokens=r.prompt)
+                if sb.num_cached:
+                    r.num_prefilled = sb.num_cached
+                    r.prefix_cached = sb.num_cached
             chunk = min(r.prefill_remaining, self.sc.chunk_size, room)
             if chunk <= 0:
                 break
-            if not self.blocks.has_seq(r.request_id):
-                self.blocks.register_seq(r.request_id)
-            if not self._ensure_blocks(r, chunk, plan):
+            if not self._ensure_blocks(r, r.num_prefilled + chunk, plan):
                 if r.is_online:
                     # keep trying victims is done inside _ensure_blocks; if it
                     # failed, memory is full of online work — stop admitting.
                     pass
+                break
+            if not self._cow_for_write(
+                r, r.num_prefilled, r.num_prefilled + chunk, plan
+            ):
                 break
             r.phase = Phase.PREFILL
             if r.first_scheduled_time is None:
                 r.first_scheduled_time = now
             self.running.append(r)
             admitted.append(r)
-            plan.prefill_chunks.append(PrefillChunk(r, offset=0, length=chunk))
+            plan.prefill_chunks.append(
+                PrefillChunk(r, offset=r.num_prefilled, length=chunk)
+            )
             plan.shape = plan.shape.merge(
-                prefill_chunk_shape(0, chunk, self.cfg)
+                prefill_chunk_shape(r.num_prefilled, chunk, self.cfg)
             )
             scheduled += chunk
         for r in admitted:
@@ -546,6 +608,7 @@ class UnifiedScheduler:
                     r.num_preemptions,
                     r.host_recoverable,
                     r.first_scheduled_time,
+                    r.prefix_cached,
                 )
                 for r in reqs
             ],
@@ -567,12 +630,13 @@ class UnifiedScheduler:
         self.t_sched = snap.t_sched
         self.current_plan = snap.current_plan
         self.blocks.restore(snap.blocks)
-        for r, phase, npref, npre, hrec, fst in snap.req_state:
+        for r, phase, npref, npre, hrec, fst, pcache in snap.req_state:
             r.phase = phase
             r.num_prefilled = npref
             r.num_preemptions = npre
             r.host_recoverable = hrec
             r.first_scheduled_time = fst
+            r.prefix_cached = pcache
 
     def _reap_finished(self) -> None:
         done = [r for r in self.running if r.phase == Phase.FINISHED]
@@ -608,6 +672,10 @@ class UnifiedScheduler:
         for chunk in plan.prefill_chunks:
             r = chunk.request
             r.num_prefilled += chunk.length
+            # Publish newly completed full prompt blocks into the content
+            # index — only now, at commit: speculative or aborted work must
+            # never become a cache source (DESIGN.md §14).
+            self.blocks.commit_prefix(r.request_id, r.num_prefilled)
             if r.prefill_remaining == 0:
                 # prompt fully prefilled: first token is produced by this
                 # same iteration (prefill emits the first logits)

@@ -101,6 +101,24 @@ def write_block(pool: jnp.ndarray, block_id, data: jnp.ndarray) -> jnp.ndarray:
     return pool.at[block_id].set(data)
 
 
+def copy_blocks(
+    pool: jnp.ndarray,  # (num_blocks, bs, Hkv, D)
+    src_ids: jnp.ndarray,  # (N,) physical source blocks
+    dst_ids: jnp.ndarray,  # (N,) physical destination blocks
+) -> jnp.ndarray:
+    """O(block) batched pool-internal copy: ``pool[dst] = pool[src]``.
+
+    The copy-on-write unit (DESIGN.md §14): when a sequence is about to
+    write into a block it shares (refcount > 1), the engine duplicates the
+    block inside the pool so the write lands in an exclusively owned copy.
+    The id lists come padded to a fixed bucket with scratch→scratch pairs,
+    so one compiled program serves any COW batch — sharing changes
+    indices, never shapes.  Fuses ``extract_block`` + ``write_block``
+    without a host round-trip.
+    """
+    return pool.at[dst_ids].set(pool[src_ids])
+
+
 def gather_paged(
     pool: jnp.ndarray,  # (num_blocks, bs, Hkv, D)
     block_tables: jnp.ndarray,  # (B, M)

@@ -99,6 +99,7 @@ from repro.core.profiler import (
 from repro.core.request import Request
 from repro.core.scheduler import SchedulerConfig, UnifiedScheduler
 from repro.core.slo import SLO
+from repro.kvcache import cache_ops
 from repro.kvcache.block_manager import BlockManager
 from repro.models import transformer as tf
 from repro.models.config import ModelConfig
@@ -143,6 +144,14 @@ class RealEngineConfig:
     # pools shard over KV heads, everything host-side stays mesh-oblivious
     # (DESIGN.md §11).  None = plain single-device execution.
     mesh: Optional[Any] = None
+    # Shared-prefix KV caching with copy-on-write block sharing
+    # (DESIGN.md §14), paged backend only: requests whose prompts share a
+    # full-block prefix with earlier committed work map existing pool
+    # blocks instead of re-prefilling them; the first divergent write
+    # duplicates the shared block on device (an O(block) copy).  Greedy
+    # tokens are bitwise identical either way — the differential harness
+    # runs both settings.  Ignored on the contiguous fallback.
+    prefix_cache: bool = True
 
 
 class _PendingFetch:
@@ -207,8 +216,15 @@ class RealEngine:
         self.ec = eng_cfg
         self.sampling = sampling
         self._clock = clock or time.perf_counter
+        if eng_cfg.backend not in ("auto", "paged", "contiguous"):
+            raise ValueError(f"unknown backend {eng_cfg.backend!r}")
+        if eng_cfg.backend == "paged" and not tf.supports_paged(cfg):
+            raise ValueError(f"{cfg.name}: arch cannot run the paged backend")
+        self.paged = eng_cfg.backend != "contiguous" and tf.supports_paged(cfg)
+
         self.blocks = BlockManager(
-            eng_cfg.num_device_blocks, eng_cfg.num_host_blocks, eng_cfg.block_size
+            eng_cfg.num_device_blocks, eng_cfg.num_host_blocks, eng_cfg.block_size,
+            prefix_cache=eng_cfg.prefix_cache and self.paged,
         )
         sched_cfg = sched_cfg or SchedulerConfig(
             chunk_size=32, slo_aware=False, offline_batch_tokens=4096
@@ -221,12 +237,6 @@ class RealEngine:
             )
         lat = AnalyticalCostModel(cfg, TPU_V5E)  # until calibrate() replaces it
         self.sched = UnifiedScheduler(cfg, lat, slo, self.blocks, sched_cfg)
-
-        if eng_cfg.backend not in ("auto", "paged", "contiguous"):
-            raise ValueError(f"unknown backend {eng_cfg.backend!r}")
-        if eng_cfg.backend == "paged" and not tf.supports_paged(cfg):
-            raise ValueError(f"{cfg.name}: arch cannot run the paged backend")
-        self.paged = eng_cfg.backend != "contiguous" and tf.supports_paged(cfg)
 
         self.mesh = eng_cfg.mesh
         if self.mesh is not None:
@@ -268,6 +278,8 @@ class RealEngine:
         self.decode_trace_count = 0  # jit retraces of the decode entry point
         self.prefill_trace_count = 0  # jit retraces of the paged prefill
         self.fused_trace_count = 0  # jit retraces of the fused segment
+        self.cow_trace_count = 0  # jit retraces of the COW block-copy program
+        self.cow_dispatches = 0  # COW copy programs actually run on device
         # Device dispatches of the jitted model programs, by entry point —
         # the fusion bench/tests count these (embed/sample eager ops and
         # checkpoint copies excluded).
@@ -508,6 +520,46 @@ class RealEngine:
                 }
 
             self._extract_jit = jax.jit(_extract)
+
+            # copy-on-write block duplication (DESIGN.md §14): realize the
+            # block manager's COW decisions as pool-internal copies before
+            # the iteration's KV writes.  cache_ops.copy_blocks vmaps over
+            # the leading period axis; shard-local like extract/restore
+            # (the copied dim is unsharded).
+            def _cow_copy(leaf, src, dst):
+                return jax.vmap(
+                    cache_ops.copy_blocks, in_axes=(0, None, None)
+                )(leaf, src, dst)
+
+            def _cow(pools, src, dst):
+                self.cow_trace_count += 1  # runs only while tracing
+                new = {
+                    pos: {
+                        kv: _cow_copy(pool[kv], src, dst) for kv in ("k", "v")
+                    }
+                    for pos, pool in pools.items()
+                }
+                return tf.constrain_paged_pools(new, self.mesh)
+
+            self._cow_jit = jax.jit(_cow, donate_argnums=(0,))
+
+            def _cow_segs(segs, src, dst):
+                # seg-split twin for the pipelined engine's permanently
+                # split pools: each slice donates in place (§13)
+                self.cow_trace_count += 1  # runs only while tracing
+                out = []
+                for seg in segs:
+                    new = {
+                        pos: {
+                            kv: _cow_copy(pool[kv], src, dst)
+                            for kv in ("k", "v")
+                        }
+                        for pos, pool in seg.items()
+                    }
+                    out.append(tf.constrain_paged_pools(new, self.mesh))
+                return tuple(out)
+
+            self._cow_segs_jit = jax.jit(_cow_segs, donate_argnums=(0,))
         else:
             self.caches: Dict[int, Any] = {}  # request_id -> cache pytree (B=1)
 
@@ -663,6 +715,39 @@ class RealEngine:
         else:
             self.pools = self._restore_jit(self.pools, ids, batched)
 
+    def _cow_blocks_paged(self, pairs: List[tuple]) -> None:
+        """Realize the block manager's copy-on-write decisions on device
+        (DESIGN.md §14): duplicate each shared source block into the fresh
+        exclusive destination the manager already rewired the sequence's
+        table to.  Runs from ``_process_events`` — strictly before this
+        iteration's dispatches enqueue, so device ordering puts the copies
+        ahead of the divergent writes that triggered them.  Id lists pad
+        to a power-of-two bucket with scratch→scratch no-op pairs: one
+        compiled program per bucket, sharing changes indices, never
+        shapes."""
+        n = len(pairs)
+        pad = self._decode_bucket(n)
+        src = self._put(np.asarray(
+            [s for _i, s, _d in pairs] + [self._scratch_block] * (pad - n),
+            np.int32,
+        ))
+        dst = self._put(np.asarray(
+            [d for _i, _s, d in pairs] + [self._scratch_block] * (pad - n),
+            np.int32,
+        ))
+        self.cow_dispatches += 1
+        if self.pipeline:
+            # donated slices: park the displaced references until the hold
+            # resolves, exactly like _restore_blocks_paged (§13)
+            displaced = self._pool_segs
+            self._pool_segs = list(
+                self._cow_segs_jit(tuple(displaced), src, dst)
+            )
+            witness = jax.tree.leaves(self._pool_segs[0])[0][0, 0, 0, 0, 0]
+            self._retired.append((witness, displaced))
+        else:
+            self.pools = self._cow_jit(self.pools, src, dst)
+
     # ------------------------------------------------------ contiguous layout
     def _fresh_cache(self, req: Request) -> Any:
         return tf.init_caches(self.cfg, 1, self.ec.max_model_len)
@@ -731,6 +816,16 @@ class RealEngine:
                 if not self.paged:
                     self.caches.pop(rid, None)
                 self.ckpt.unmark(req)
+            elif kind == "cow":
+                # copy-on-write: duplicate shared blocks before this
+                # iteration's writes land in them (DESIGN.md §14).  Any
+                # host-store bytes for the re-written indices predate the
+                # divergence — drop them (the manager already released the
+                # host blocks) so a later resume can never restore stale KV.
+                if self.paged and payload:
+                    self._cow_blocks_paged(payload)
+                for idx, _src, _dst in payload:
+                    self.host.pop(rid, idx)
             elif kind == "resume":
                 nrec = self.blocks.blocks_for_tokens(req.host_recoverable)
                 if self.paged:

@@ -3,12 +3,12 @@
 The CI container cannot install hypothesis; rather than skip the property
 tests outright, this shim re-exports the real library when present and
 otherwise provides a minimal deterministic random-sampling implementation of
-the small API surface the tests use (`given`, `settings`,
-`strategies.integers/sampled_from/booleans/lists/tuples`).  It is NOT a
+the small API surface the tests use (`given`, `settings`, `assume`,
+`strategies.integers/sampled_from/booleans/lists/tuples/data`).  It is NOT a
 general hypothesis replacement: no shrinking, no database, fixed seed.
 """
 try:  # pragma: no cover - exercised only where hypothesis is installed
-    from hypothesis import given, settings, strategies  # noqa: F401
+    from hypothesis import assume, given, settings, strategies  # noqa: F401
 
     HAVE_HYPOTHESIS = True
 except ImportError:
@@ -18,9 +18,30 @@ except ImportError:
 
     HAVE_HYPOTHESIS = False
 
+    class _Assumption(Exception):
+        """Example discarded by ``assume`` — the runner tries another."""
+
+    def assume(condition):
+        if not condition:
+            raise _Assumption()
+        return True
+
     class _Strategy:
         def __init__(self, draw):
             self.draw = draw
+
+    class _Data:
+        """Interactive draw object (the shim's ``st.data()`` value): hands
+        the example's RNG to mid-test draws, so stateful tests can pick
+        each operation from state-dependent strategies — the draw sequence
+        stays deterministic because every draw consumes the same
+        ``random.Random(0)`` stream the up-front strategies use."""
+
+        def __init__(self, rng):
+            self._rng = rng
+
+        def draw(self, strategy, label=None):
+            return strategy.draw(self._rng)
 
     class strategies:  # noqa: N801 - mimic the hypothesis module name
         @staticmethod
@@ -49,6 +70,10 @@ except ImportError:
         def tuples(*elems):
             return _Strategy(lambda r: tuple(e.draw(r) for e in elems))
 
+        @staticmethod
+        def data():
+            return _Strategy(lambda r: _Data(r))
+
     def settings(max_examples=20, deadline=None, **_ignored):
         def deco(fn):
             fn._max_examples = max_examples
@@ -61,10 +86,23 @@ except ImportError:
             @functools.wraps(fn)
             def wrapper(*args, **kwargs):
                 rng = random.Random(0)
-                for _ in range(getattr(wrapper, "_max_examples", 20)):
-                    drawn = [s.draw(rng) for s in arg_strategies]
-                    drawn_kw = {k: s.draw(rng) for k, s in kw_strategies.items()}
-                    fn(*args, *drawn, **{**kwargs, **drawn_kw})
+                want = getattr(wrapper, "_max_examples", 20)
+                ran = 0
+                # a bounded attempt budget keeps an over-eager assume from
+                # looping forever (mirrors hypothesis's discard limit)
+                for _ in range(want * 10):
+                    if ran >= want:
+                        break
+                    try:
+                        drawn = [s.draw(rng) for s in arg_strategies]
+                        drawn_kw = {
+                            k: s.draw(rng) for k, s in kw_strategies.items()
+                        }
+                        fn(*args, *drawn, **{**kwargs, **drawn_kw})
+                        ran += 1
+                    except _Assumption:
+                        continue
+                assert ran > 0, "every generated example was assumed away"
 
             # hide the strategy params so pytest doesn't see fixtures
             wrapper.__signature__ = inspect.Signature()

@@ -222,6 +222,132 @@ def test_pipelined_mid_iteration_abort_discards_staged_batch():
     )
 
 
+def _run_shared(arch, stagger=3, mesh=None, eng_kw=None):
+    """Shared-prefix trace (DESIGN.md §14): request 0 carries the full
+    32-token stem and is submitted first; after ``stagger`` steps (its stem
+    blocks are committed to the content index) the rest arrive:
+
+      * req 1 shares 24 stem tokens — diverges MID-block (block 1 of
+        bs=16 is half stem, half private), so only block 0 is mapped;
+      * req 2 IS the stem (prompt_len an exact block multiple): both
+        blocks map, 31 tokens cached, and the recompute of the final
+        prompt token fires copy-on-write in the shared tail block;
+      * req 3 shares 24 tokens again (second hit on the same chain).
+
+    Returns (tokens per request, engine) — callers compare tokens across
+    legs and read the hit/COW counters."""
+    cfg, params = _model(arch)
+    eng = RealEngine(
+        cfg, params,
+        eng_cfg=RealEngineConfig(backend="paged", mesh=mesh, **(eng_kw or {})),
+    )
+    stem = (
+        np.random.default_rng(777)
+        .integers(0, cfg.vocab_size, 32)
+        .astype(np.int32)
+    )
+    specs = [(40, 8, 32), (40, 8, 24), (32, 8, 32), (40, 6, 24)]
+    reqs = []
+    for seed, (plen, gen, share) in enumerate(specs):
+        prompt = (
+            np.random.default_rng(50 + seed)
+            .integers(0, cfg.vocab_size, plen)
+            .astype(np.int32)
+        )
+        prompt[:share] = stem[:share]
+        reqs.append(
+            Request(
+                Priority.OFFLINE, prompt_len=plen, max_new_tokens=gen,
+                prompt=prompt,
+            )
+        )
+    eng.submit(reqs[0])
+    for _ in range(stagger):
+        eng.step()
+    for r in reqs[1:]:
+        eng.submit(r)
+    eng.run()
+    return [r.output_tokens for r in reqs], eng
+
+
+@pytest.mark.parametrize("arch,jobs,preempt_step,eng_kw", CASES)
+def test_prefix_cache_setting_is_token_invariant(arch, jobs, preempt_step,
+                                                 eng_kw):
+    """`prefix_cache=True` (the default every leg above already runs under)
+    vs `prefix_cache=False` on the fused path, across the existing case
+    axes — bucket crossings, preempt/resume, GQA/sharded-pool shapes.
+    Sharing may rewire physical block indices but must never change a
+    single emitted token."""
+    out_on, on_on, _ = _run(arch, "paged", jobs, preempt_step, eng_kw=eng_kw)
+    out_off, on_off, _ = _run(
+        arch, "paged", jobs, preempt_step,
+        eng_kw=dict(eng_kw, prefix_cache=False),
+    )
+    assert out_on == out_off, "prefix caching changed offline tokens"
+    assert on_on == on_off, "prefix caching changed online tokens"
+
+
+def test_shared_prefix_tokens_identical_across_legs():
+    """The sharing-heavy trace (hits + mid-block divergence + COW) must
+    emit byte-identical greedy tokens on every execution leg and with
+    caching disabled — cached KV reuse and the COW copies are exact."""
+    out_off, eng_off = _run_shared(
+        "llama-2-7b", eng_kw=dict(prefix_cache=False)
+    )
+    out_s, eng_s = _run_shared("llama-2-7b", eng_kw=dict(fused_batch=False))
+    out_f, eng_f = _run_shared("llama-2-7b")
+    out_p, eng_p = _run_shared("llama-2-7b", eng_kw=dict(pipeline=True))
+    out_m, _ = _run_shared("llama-2-7b", mesh=make_serving_mesh(_tp()))
+    assert out_s == out_off, "split paged leg diverged under sharing"
+    assert out_f == out_off, "fused leg diverged under sharing"
+    assert out_p == out_off, "pipelined leg diverged under sharing"
+    assert out_m == out_off, "sharded leg diverged under sharing"
+    assert eng_off.blocks.prefix_hits == 0
+    for eng in (eng_s, eng_f, eng_p):
+        assert eng.blocks.prefix_hits == 3, "trace must hit the index 3x"
+        assert eng.blocks.prefix_tokens_saved == 16 + 31 + 16
+        assert eng.blocks.cow_copies >= 1, "block-aligned prompt must COW"
+        assert eng.cow_dispatches >= 1, "COW never reached the device"
+
+
+def test_shared_prefix_mid_iteration_abort_is_exact():
+    """Safepoint abort landing on an iteration whose COW copies already
+    ran on device: the aborted divergent writes sit in the exclusively
+    owned copy and are rewritten verbatim on re-execution — tokens must
+    not change, and the index must never have published aborted work
+    (commit_prefix runs only on committed iterations)."""
+    cfg, params = _model("llama-2-7b")
+
+    def _go(abort):
+        eng = RealEngine(cfg, params, eng_cfg=RealEngineConfig(backend="paged"))
+        stem = (
+            np.random.default_rng(777)
+            .integers(0, cfg.vocab_size, 32)
+            .astype(np.int32)
+        )
+        first = _mkreq(cfg, Priority.OFFLINE, 40, 8, 50)
+        first.prompt[:32] = stem
+        twin = Request(
+            Priority.OFFLINE, prompt_len=32, max_new_tokens=8,
+            prompt=stem.copy(),
+        )
+        eng.submit(first)
+        for _ in range(3):
+            eng.step()
+        eng.submit(twin)
+        if abort:
+            # the next step plans the twin's COW + suffix chunk; abort it
+            eng.arrival_poll = lambda: eng.flag.set()
+            eng.step()
+            assert eng.safepoints.stats.preemptions == 1, "no abort happened"
+            eng.arrival_poll = None
+        eng.run()
+        assert eng.blocks.prefix_hits == 1
+        return [first.output_tokens, twin.output_tokens]
+
+    assert _go(True) == _go(False), "abort over a COW changed tokens"
+
+
 def test_sharded_pool_is_actually_sharded():
     """With a dividing mesh, the MHA pool must shard its KV-head axis (the
     memory win tensor parallelism exists for); otherwise (1 device, or an

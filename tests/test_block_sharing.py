@@ -1,0 +1,352 @@
+"""Property-based harness for shared-prefix block sharing (DESIGN.md §14).
+
+Drives random interleavings of register / grow / COW-write / commit /
+checkpoint / preempt_discard / preempt_swap_out / resume / finish against a
+``BlockManager`` with ``prefix_cache=True``, asserting the pool invariants
+after every single step via ``check_invariants`` (refcounts match live table
+references, no double-free, no leak, free-count conservation, index
+bijectivity) plus sharing-specific postconditions checked inline:
+
+* a prefix hit maps the *same physical blocks* as the source chain;
+* after ``prepare_write`` the writer owns every block in the write range
+  exclusively (no aliased-after-COW block), and the source block stays
+  live for its other owners;
+* a "discarded" shared block survives in the peers' tables;
+* a host checkpoint taken before a divergence is released by the COW
+  barrier (the checkpoint-under-sharing staleness rule);
+* ``snapshot``/``restore`` round-trips the full sharing state.
+
+Prompts draw from a small set of shared stems so hits, divergences, and
+cached-free resurrection all occur organically.  Runs under both the real
+hypothesis library and the deterministic shim (`_hypothesis_compat`), using
+``st.data()`` for state-dependent interactive draws and ``assume`` to
+discard interleavings whose preconditions fail.
+"""
+import itertools
+
+import pytest
+from _hypothesis_compat import assume, given, settings, strategies as st
+
+from repro.kvcache.block_manager import BlockManager, OutOfBlocks, chain_keys
+
+BS = 4  # small blocks so chains span several blocks at tiny token counts
+DEV = 24
+HOST = 32
+
+# Shared stems (multiples of BS so full-block chains collide) + a
+# divergent-suffix pool: prompts = stem + fresh tokens.
+STEMS = [
+    list(range(100, 100 + 2 * BS)),
+    list(range(100, 100 + 2 * BS)),  # duplicated: same stem drawn often
+    list(range(200, 200 + 3 * BS)),
+    [7] * BS,
+]
+
+
+def _mk() -> BlockManager:
+    return BlockManager(DEV, HOST, BS, prefix_cache=True)
+
+
+def _prompt(rng_stem, suffix_len, tag) -> list:
+    return list(rng_stem) + [1000 + tag * 64 + i for i in range(suffix_len)]
+
+
+# --------------------------------------------------------------- directed
+
+
+def test_register_maps_shared_prefix_onto_same_blocks():
+    bm = _mk()
+    toks = _prompt(STEMS[0], 3, tag=0)
+    a = bm.register_seq(0, tokens=toks)
+    assert a.num_cached == 0  # empty index: nothing to hit
+    bm.grow(0, len(toks))
+    bm.commit_prefix(0, len(toks))
+    b = bm.register_seq(1, tokens=toks)
+    assert b.num_cached == 2 * BS
+    assert b.device_blocks == a.device_blocks[:2]
+    assert all(bm.block_refcount(x) == 2 for x in b.device_blocks)
+    assert bm.prefix_hits == 1
+    assert bm.prefix_tokens_saved == 2 * BS
+    bm.check_invariants()
+
+
+def test_fully_indexed_prompt_keeps_one_query_token():
+    """A prompt that is an exact block multiple of an indexed chain maps
+    all its blocks but caches only len-1 tokens — the recompute of the
+    final token is the canonical COW trigger."""
+    bm = _mk()
+    toks = list(STEMS[0])  # 2*BS tokens, exactly the indexed chain
+    bm.register_seq(0, tokens=toks)
+    bm.grow(0, len(toks))
+    bm.commit_prefix(0, len(toks))
+    b = bm.register_seq(1, tokens=toks)
+    assert b.num_cached == len(toks) - 1
+    assert len(b.device_blocks) == 2  # both chain blocks mapped
+    pairs = bm.prepare_write(1, len(toks) - 1, len(toks))
+    assert len(pairs) == 1 and pairs[0][0] == 1  # COW of the tail block
+    idx, src, dst = pairs[0]
+    assert b.device_blocks[1] == dst and src != dst
+    assert bm.block_refcount(dst) == 1 and bm.block_refcount(src) == 1
+    assert bm.cow_copies == 1
+    bm.check_invariants()
+
+
+def test_discard_under_sharing_keeps_peer_blocks_live():
+    bm = _mk()
+    toks = _prompt(STEMS[2], 2, tag=1)
+    a = bm.register_seq(0, tokens=toks)
+    bm.grow(0, len(toks))
+    bm.commit_prefix(0, len(toks))
+    bm.register_seq(1, tokens=toks)
+    shared = list(bm.seq(1).device_blocks)
+    bm.grow(1, len(toks))
+    free_before = bm.free_device_blocks
+    bm.preempt_discard(1)
+    # the shared blocks stay live for seq 0 — only seq 1's exclusive
+    # tail went back to the pool
+    assert all(bm.block_refcount(x) == 1 for x in shared)
+    assert a.device_blocks[: len(shared)] == shared
+    assert bm.free_device_blocks == free_before + 1
+    bm.check_invariants()
+
+
+def test_cow_releases_stale_host_checkpoint():
+    """The staleness rule (§14): a host checkpoint taken before a
+    divergent write must not survive the COW — the manager releases the
+    seq's host block and the caller drops the stored bytes."""
+    bm = _mk()
+    toks = list(STEMS[2])  # 3 full blocks
+    bm.register_seq(0, tokens=toks)
+    bm.grow(0, len(toks))
+    bm.commit_prefix(0, len(toks))
+    b = bm.register_seq(1, tokens=toks)
+    bm.assign_checkpoint(1, 1)  # host-checkpoint a SHARED block
+    assert b.host_blocks[1] >= 0
+    free_host = bm.free_host_blocks
+    pairs = bm.prepare_write(1, BS, 2 * BS)  # diverge inside block 1
+    assert [i for i, _s, _d in pairs] == [1]
+    assert b.host_blocks[1] == -1, "stale checkpoint must be released"
+    assert bm.free_host_blocks == free_host + 1
+    bm.check_invariants()
+
+
+def test_cached_free_blocks_are_capacity_and_resurrect():
+    bm = _mk()
+    toks = _prompt(STEMS[0], 1, tag=2)
+    bm.register_seq(0, tokens=toks)
+    bm.grow(0, len(toks))
+    bm.commit_prefix(0, len(toks))
+    bm.free_seq(0)
+    # the indexed blocks idle in the cached-free pool: still capacity...
+    assert bm.free_device_blocks == DEV
+    assert bm.cached_free_blocks == 2
+    # ...and a new identical prompt resurrects them with their KV intact
+    b = bm.register_seq(1, tokens=toks)
+    assert b.num_cached == 2 * BS
+    assert bm.cached_free_blocks == 0
+    bm.check_invariants()
+    # exhausting the pool lazily evicts cached-free blocks (oldest first)
+    bm.free_seq(1)
+    big = bm.register_seq(2, tokens=None)
+    bm.grow(2, DEV * BS)
+    assert len(big.device_blocks) == DEV
+    assert bm.cached_free_blocks == 0
+    with pytest.raises(OutOfBlocks):
+        bm.grow(2, (DEV + 1) * BS)
+    bm.check_invariants()
+
+
+def test_chain_keys_are_prefix_sensitive():
+    a = chain_keys(list(range(3 * BS)), BS)
+    b = chain_keys(list(range(3 * BS)), BS)
+    assert a == b and len(a) == 3
+    c = chain_keys([99] + list(range(1, 3 * BS)), BS)
+    # first-token difference changes EVERY downstream key (chained digest)
+    assert all(x != y for x, y in zip(a, c))
+
+
+# --------------------------------------------------------------- stateful
+
+
+class _Machine:
+    """Host-side twin of the engine's usage of BlockManager, tracking just
+    enough (token chains, residency) to pick valid operations."""
+
+    def __init__(self):
+        self.bm = _mk()
+        self.ids = itertools.count()
+        self.tokens = {}  # seq_id -> full token list (prompt + generated)
+        self.resident = set()
+        self.preempted = set()
+
+    # each op returns False when its precondition failed (example moves on)
+    def register(self, data):
+        stem = data.draw(st.sampled_from(STEMS))
+        suffix = data.draw(st.integers(0, 2 * BS))
+        sid = next(self.ids)
+        toks = _prompt(stem, suffix, tag=sid)
+        sb = self.bm.register_seq(sid, tokens=toks)
+        assert sb.num_cached <= max(0, len(toks) - 1)
+        if sb.num_cached:
+            # the mapped blocks must be exactly the indexed chain's blocks
+            keys = chain_keys(toks, BS)
+            for i, b in enumerate(sb.device_blocks):
+                assert self.bm._index[keys[i]] == b
+                # >= 1: a hit on a cached-free block (its sharer already
+                # finished) resurrects it as this seq's exclusive block
+                assert self.bm.block_refcount(b) >= 1
+        self.tokens[sid] = toks
+        self.resident.add(sid)
+        return True
+
+    def grow(self, data):
+        if not self.resident:
+            return False
+        sid = data.draw(st.sampled_from(sorted(self.resident)))
+        sb = self.bm.seq(sid)
+        extra = data.draw(st.integers(1, 2 * BS))
+        target = sb.num_tokens + extra
+        if not self.bm.can_allocate(sid, target):
+            return False
+        before = len(sb.device_blocks)
+        new = self.bm.grow(sid, target)
+        assert len(sb.device_blocks) == before + len(new)
+        assert all(self.bm.block_refcount(b) == 1 for b in new)
+        return True
+
+    def cow_write(self, data):
+        if not self.resident:
+            return False
+        sid = data.draw(st.sampled_from(sorted(self.resident)))
+        sb = self.bm.seq(sid)
+        if sb.num_tokens == 0:
+            return False
+        lo = data.draw(st.integers(0, sb.num_tokens - 1))
+        hi = data.draw(st.integers(lo + 1, sb.num_tokens))
+        try:
+            pairs = self.bm.prepare_write(sid, lo, hi)
+        except OutOfBlocks:
+            return False
+        for idx, src, dst in pairs:
+            assert sb.device_blocks[idx] == dst
+            assert self.bm.block_refcount(dst) == 1, "aliased-after-COW"
+            assert self.bm.block_refcount(src) >= 1, "peer lost its block"
+        # the whole write range is now exclusively owned
+        for i in range(lo // BS, min((hi - 1) // BS + 1, len(sb.device_blocks))):
+            assert self.bm.block_refcount(sb.device_blocks[i]) == 1
+        return True
+
+    def commit(self, data):
+        if not self.resident:
+            return False
+        sid = data.draw(st.sampled_from(sorted(self.resident)))
+        self.bm.commit_prefix(sid, self.bm.seq(sid).num_tokens)
+        return True
+
+    def checkpoint(self, data):
+        cands = [
+            s for s in sorted(self.resident)
+            if self.bm.checkpoint_candidates(s)
+        ]
+        if not cands or not self.bm.free_host_blocks:
+            return False
+        sid = data.draw(st.sampled_from(cands))
+        idx, _dev = self.bm.checkpoint_candidates(sid)[0]
+        self.bm.assign_checkpoint(sid, idx)
+        return True
+
+    def discard(self, data):
+        if not self.resident:
+            return False
+        sid = data.draw(st.sampled_from(sorted(self.resident)))
+        self.bm.preempt_discard(sid)
+        self.resident.discard(sid)
+        self.preempted.add(sid)
+        return True
+
+    def swap_out(self, data):
+        if not self.resident:
+            return False
+        sid = data.draw(st.sampled_from(sorted(self.resident)))
+        try:
+            self.bm.preempt_swap_out(sid)
+        except OutOfBlocks:
+            return False  # atomic: nothing changed
+        self.resident.discard(sid)
+        self.preempted.add(sid)
+        return True
+
+    def resume(self, data):
+        if not self.preempted:
+            return False
+        sid = data.draw(st.sampled_from(sorted(self.preempted)))
+        if not self.bm.can_resume(sid):
+            return False
+        self.bm.resume(sid)
+        sb = self.bm.seq(sid)
+        # resumed blocks are always exclusive (never re-mapped from index)
+        assert all(self.bm.block_refcount(b) == 1 for b in sb.device_blocks)
+        self.preempted.discard(sid)
+        self.resident.add(sid)
+        return True
+
+    def finish(self, data):
+        alive = sorted(self.resident | self.preempted)
+        if not alive:
+            return False
+        sid = data.draw(st.sampled_from(alive))
+        self.bm.free_seq(sid)
+        self.resident.discard(sid)
+        self.preempted.discard(sid)
+        self.tokens.pop(sid)
+        return True
+
+
+_OPS = [
+    "register", "register", "grow", "grow", "cow_write", "commit", "commit",
+    "checkpoint", "discard", "swap_out", "resume", "finish",
+]
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.data())
+def test_random_interleavings_preserve_pool_invariants(data):
+    m = _Machine()
+    steps = data.draw(st.integers(20, 60))
+    performed = 0
+    for _ in range(steps):
+        op = data.draw(st.sampled_from(_OPS))
+        if getattr(m, op)(data):
+            performed += 1
+        m.bm.check_invariants()  # after EVERY step, attempted or not
+    assume(performed >= steps // 2)
+    # terminal drain: finishing everything returns the pool to fully free
+    for sid in sorted(m.resident | m.preempted):
+        m.bm.free_seq(sid)
+        m.bm.check_invariants()
+    assert m.bm.free_device_blocks == DEV, "blocks leaked across lifecycle"
+    assert m.bm.free_host_blocks == HOST, "host blocks leaked"
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.data())
+def test_snapshot_restore_roundtrips_sharing_state(data):
+    m = _Machine()
+    for _ in range(data.draw(st.integers(5, 20))):
+        getattr(m, data.draw(st.sampled_from(_OPS)))(data)
+    m.bm.check_invariants()
+    snap = m.bm.snapshot()
+    hits0, saved0, cow0 = (
+        m.bm.prefix_hits, m.bm.prefix_tokens_saved, m.bm.cow_copies,
+    )
+    for _ in range(data.draw(st.integers(5, 20))):
+        getattr(m, data.draw(st.sampled_from(_OPS)))(data)
+    m.bm.check_invariants()
+    m.bm.restore(snap)
+    m.bm.check_invariants()
+    # the rewound state must be bit-identical — including the counters,
+    # so speculative planning can never inflate hit/COW stats (§13/§14)
+    assert m.bm.snapshot() == snap
+    assert (m.bm.prefix_hits, m.bm.prefix_tokens_saved, m.bm.cow_copies) == (
+        hits0, saved0, cow0,
+    )

@@ -430,3 +430,86 @@ def test_pipelined_retrace_regression_guard_mixed_onoff_drain():
     assert eng.host_gap_count == len(eng.host_gap_s)
     assert eng.host_gap_seconds == pytest.approx(sum(eng.host_gap_s))
     assert all(g >= 0.0 for g in eng.host_gap_s)
+
+
+def test_prefix_retrace_regression_guard_shared_drain():
+    """Sharing must not leak trace keys (DESIGN.md §14): a draining mixed
+    ON/OFF workload whose offline prompts share a 32-token stem — so the
+    drain takes prefix hits, a mid-block divergence, and a copy-on-write —
+    keeps the fused-segment retraces inside the same ragged-bucket family
+    as the unshared drains above (sharing rewires block-table *indices*,
+    never batch shapes).  The COW copies compile their own bucketed
+    program, counted by ``cow_trace_count`` and dispatched outside
+    ``eng.dispatches`` (the §12 exact-delta contract stays intact).  Also
+    checks counter consistency: with safepoints off (no speculative
+    rollback), every token the index served is attributed to exactly one
+    request — sum(r.prefix_cached) == blocks.prefix_tokens_saved."""
+    eng = RealEngine(
+        CFG, PARAMS,
+        eng_cfg=RealEngineConfig(backend="paged", enable_safepoints=False),
+    )
+    stem = (
+        np.random.default_rng(7)
+        .integers(0, CFG.vocab_size, 32)
+        .astype(np.int32)
+    )
+    # (prompt_len, max_new, shared stem tokens): req 2 IS the stem (exact
+    # block multiple -> COW on the final prompt token); the rest diverge
+    # mid-block or at the boundary
+    specs = [(40, 4, 32), (40, 6, 24), (32, 8, 32), (40, 10, 24),
+             (24, 12, 16)]
+    reqs = []
+    for seed, (plen, gen, share) in enumerate(specs):
+        prompt = (
+            np.random.default_rng(seed)
+            .integers(0, CFG.vocab_size, plen)
+            .astype(np.int32)
+        )
+        prompt[:share] = stem[:share]
+        reqs.append(
+            Request(
+                Priority.OFFLINE, prompt_len=plen, max_new_tokens=gen,
+                prompt=prompt,
+            )
+        )
+    eng.submit(reqs[0])
+    for _ in range(2):  # commit req 0's stem blocks into the index
+        eng.step()
+    for r in reqs[1:]:
+        eng.submit(r)
+    for _ in range(2):
+        eng.step()
+    for s in range(3):
+        eng.on_online_arrival(mkreq(Priority.ONLINE, 60, 8, 100 + s))
+    eng.run()
+    # the trace actually exercised sharing
+    assert eng.blocks.prefix_hits == 4, "shared drain must hit the index 4x"
+    assert eng.blocks.cow_copies >= 1, "block-aligned twin never COWed"
+    assert eng.cow_dispatches >= 1
+    # fused retraces stay bucket-bounded; sharing adds no per-shape keys.
+    # This exact trace with prefix_cache=False compiles 6 programs; the
+    # on leg compiles 7 because skipping cached tokens legitimately moves
+    # one chunk into a different qlen bucket — still far below the 14
+    # iteration shapes the drain produces (a per-shape leak would pin
+    # fused_trace_count to eng.steps)
+    assert eng.fused_trace_count == 7, (
+        f"fused retraces changed under sharing: {eng.fused_trace_count} "
+        "(was 7); did prefix mapping leak per-shape trace keys?"
+    )
+    assert eng.fused_trace_count < eng.steps
+    assert eng.cow_trace_count == 1, (
+        f"COW retraces changed: {eng.cow_trace_count} (was 1); "
+        "did the pow2 pair-list bucketing break?"
+    )
+    # split-path programs never ran; fusion contract intact
+    assert eng.dispatches["prefill"] == eng.dispatches["decode"] == 0
+    assert eng.dispatches["fused_segment"] == eng.steps * tf.num_segments(
+        CFG
+    )
+    # attribution: every index-served token belongs to exactly one request
+    assert (
+        sum(r.prefix_cached for r in reqs)
+        == eng.blocks.prefix_tokens_saved
+    ), "prefix_tokens_saved disagrees with per-request attribution"
+    assert all(len(r.output_tokens) == g for r, (_, g, _s) in
+               zip(reqs, specs))
