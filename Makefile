@@ -32,9 +32,11 @@ bench-fused:
 bench-prefix:
 	python -m benchmarks.prefix_cache_bench --assert-prefill-reduction
 
-# real-execution co-serving on the wall clock (DESIGN.md §10)
+# real-execution co-serving on the wall clock (DESIGN.md §10); scrapes the
+# metrics registry mid-replay and fails on gateway-surface inconsistencies
+# (DESIGN.md §15)
 bench-wallclock:
-	python -m benchmarks.coserve_wallclock_bench
+	python -m benchmarks.coserve_wallclock_bench --assert-metrics
 
 # tensor-parallel paged serving at mesh sizes 1/2/4 (DESIGN.md §11)
 bench-sharded:

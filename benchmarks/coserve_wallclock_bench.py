@@ -62,12 +62,21 @@ def main() -> None:
     # guarantee below holds on it unchanged.
     ap.add_argument("--tp", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: short duration, small offline pool, "
+                         "single-repeat calibration grid")
+    ap.add_argument("--assert-metrics", action="store_true",
+                    help="scrape the metrics registry mid-replay and fail "
+                         "unless gauges are live, counters monotone, and "
+                         "the final surface matches ServiceMetrics")
     args = ap.parse_args()
+
+    import threading
 
     import jax
 
     from repro.configs import get_config
-    from repro.core.profiler import BatchShape
+    from repro.core.profiler import BatchShape, CalibrationGrid
     from repro.core.scheduler import SchedulerConfig
     from repro.core.slo import SLO
     from repro.launch.mesh import make_serving_mesh
@@ -75,6 +84,23 @@ def main() -> None:
     from repro.serving import loadgen
     from repro.serving.real_engine import RealEngine, RealEngineConfig
     from repro.serving.runtime import CoServingRuntime
+
+    grid = None
+    if args.smoke:
+        args.duration = min(args.duration, 1.0)
+        args.offline = min(args.offline, 6)
+        # same bucket coverage the auto-derived grid warms (chunk_size=32,
+        # max_prefill_batch=4, max_batch_seqs=8 below) so the replay still
+        # never compiles mid-run, but one timed repeat and one context depth
+        grid = CalibrationGrid(
+            chunk_sizes=(8, 16, 32),
+            prefill_batches=(1, 2, 4),
+            decode_buckets=(1, 2, 4, 8),
+            ctx_fractions=(0.25,),
+            token_buckets=(64, 128),
+            repeats=1,
+            warmup=1,
+        )
 
     cfg = get_config(args.arch).reduced(num_layers=4, safepoint_interval=1)
     params = tf.init_params(cfg, jax.random.PRNGKey(args.seed))
@@ -104,7 +130,7 @@ def main() -> None:
     )
 
     t0 = time.perf_counter()
-    prof = eng.calibrate()
+    prof = eng.calibrate(grid)
     t_chunk = prof.iter_time(
         BatchShape(
             prefill_tokens=32,
@@ -160,7 +186,27 @@ def main() -> None:
 
     # ---- replay -----------------------------------------------------------
     rt = CoServingRuntime(eng)
+
+    # --assert-metrics: scrape the registry from another thread while the
+    # replay runs — exactly what a production scraper does (DESIGN.md §15).
+    snaps: list = []
+    scrape_stop = threading.Event()
+
+    def scrape() -> None:
+        while not scrape_stop.is_set():
+            snaps.append(rt.registry.snapshot())
+            time.sleep(0.05)
+
+    scraper = None
+    if args.assert_metrics:
+        scraper = threading.Thread(target=scrape, daemon=True)
+        scraper.start()
+
     m = rt.replay(online + offline)
+
+    if scraper is not None:
+        scrape_stop.set()
+        scraper.join(timeout=2.0)
 
     print(
         f"p99_ttft_ms={m.p99_ttft * 1e3:.0f} p99_tpot_ms={m.p99_tpot * 1e3:.0f} "
@@ -189,6 +235,72 @@ def main() -> None:
             "warning: no safepoint abort observed — SLO too loose for this "
             "substrate? (try --ttft-scale 1.0 or a denser --rate)"
         )
+
+    # ---- metrics surface (DESIGN.md §15) ---------------------------------
+    final = rt.registry.snapshot()
+    print(
+        "metrics "
+        f"iterations_total={final['iterations_total']:.0f} "
+        f"aborted_iterations_total={final['aborted_iterations_total']:.0f} "
+        f"safepoint_checks_total={final['safepoint_checks_total']:.0f} "
+        f"queue_depth_online={final['queue_depth_online']:.0f} "
+        f"queue_depth_offline={final['queue_depth_offline']:.0f}"
+    )
+    print(
+        "metrics "
+        f"slo_ttft_attainment={final['slo_ttft_attainment']:.3f} "
+        f"slo_tpot_attainment={final['slo_tpot_attainment']:.3f} "
+        f"pool_occupancy={final['pool_occupancy']:.3f} "
+        f"prefix_cache_hit_rate={final['prefix_cache_hit_rate']:.3f} "
+        f"calibration_drift={final.get('calibration_drift', 0.0):.2f}"
+    )
+
+    if args.assert_metrics:
+        # liveness: at least one mid-replay scrape saw the engine running
+        # (iterations strictly between 0 and the final count)
+        finals = final["iterations_total"]
+        assert finals > 0, "no iterations recorded in the registry"
+        live = [
+            s for s in snaps
+            if 0 < s.get("iterations_total", 0) < finals
+        ]
+        assert live, (
+            f"no live mid-replay scrape: {len(snaps)} snapshots, "
+            f"final iterations_total={finals:.0f}"
+        )
+        # counters monotone across successive scrapes (snapshot has no
+        # consistent cross-metric cut, but each counter alone is monotone)
+        mono_keys = [
+            k for k in final
+            if k.endswith("_total") or k.endswith("_count") or k.endswith("_sum")
+        ]
+        prev: dict = {}
+        for s in snaps + [final]:
+            for k in mono_keys:
+                if k in s and k in prev:
+                    assert s[k] >= prev[k] - 1e-12, (
+                        f"counter {k} went backwards: {prev[k]} -> {s[k]}"
+                    )
+            prev = {**prev, **s}
+        # abort gauges consistent with runtime stats (satellite: every
+        # abort records exactly one preemption latency)
+        assert final["aborted_iterations_total"] == rt.stats.safepoint_aborts
+        assert (
+            len(rt.stats.preemption_latencies) == rt.stats.safepoint_aborts
+        ), (
+            f"{rt.stats.safepoint_aborts} aborts but "
+            f"{len(rt.stats.preemption_latencies)} preemption latencies"
+        )
+        # SLO attainment gauges match ServiceMetrics exactly (the
+        # incremental SLOTracker consumes the same TTFT/TPOT values that
+        # summarize() recomputes)
+        assert abs(final["slo_ttft_attainment"] - m.ttft_slo_attainment) < 1e-9
+        assert abs(final["slo_tpot_attainment"] - m.tpot_slo_attainment) < 1e-9
+        # the replay drained: waiting queues empty, nothing truncated
+        assert final["queue_depth_online"] == 0
+        assert final["queue_depth_offline"] == 0
+        assert not rt.stats.steps_exhausted
+        print(f"assert-metrics OK ({len(snaps)} scrapes, {len(live)} live)")
 
 
 if __name__ == "__main__":

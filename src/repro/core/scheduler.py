@@ -176,6 +176,21 @@ class UnifiedScheduler:
             r.is_online for r in self.running if r.phase != Phase.FINISHED
         )
 
+    def queue_depths(self) -> Tuple[int, int, int, int]:
+        """(online_waiting, offline_waiting, running, preempted) list lengths.
+
+        Four ``len`` reads of lists mutated only on the engine thread; the
+        wall-clock runtime publishes the result under its ingress lock each
+        iteration so API threads (backpressure checks, ``stop`` drain waits,
+        metrics gauges) never touch scheduler lists directly (DESIGN.md §15).
+        """
+        return (
+            len(self.online_q),
+            len(self.offline_q),
+            len(self.running),
+            len(self.preempted),
+        )
+
     def all_requests(self) -> List[Request]:
         return (
             self.online_q

@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Iterable, List
+from typing import Dict, Iterable, List, Tuple
 
 import numpy as np
 
@@ -43,6 +43,74 @@ def _processed_tokens(r: Request) -> int:
     metric (its Online-Only baseline of 1999 tok/s at ~2 req/s only adds up
     with prompt tokens counted)."""
     return min(r.num_prefilled, r.prompt_len) + r.num_generated
+
+
+class SLOTracker:
+    """Incremental SLO attainment over live requests (DESIGN.md §15).
+
+    ``summarize`` recomputes attainment from scratch over every request;
+    that is fine post-hoc but too expensive to run per engine iteration.
+    This tracker consumes each online request's ``ttft`` once and its
+    ``token_times`` diffs exactly once (per-request cursors), so repeated
+    ``observe`` calls over the same request list do O(new tokens) work and
+    the running attainment fractions are *identical* to what ``summarize``
+    would report over the same requests — same TTFT values, same TPOT
+    diffs, same empty-set convention (attainment 1.0 with no samples).
+
+    ``observe`` returns the newly consumed (ttfts, tpots) so a caller can
+    feed latency histograms without re-deriving them.  Works against
+    pipelined engines too: ``Request.record_token`` appends ``token_times``
+    even for structural commits whose token value arrives later, so timing
+    is complete at observation time even when ``output_tokens`` lags.
+    """
+
+    def __init__(self, slo: SLO):
+        self.slo = slo
+        # request_id -> number of token_times already consumed
+        self._seen: Dict[int, int] = {}
+        self._ttft_done: set = set()
+        self.ttft_count = 0
+        self.ttft_attained = 0
+        self.tpot_count = 0
+        self.tpot_attained = 0
+
+    def observe(
+        self, requests: Iterable[Request]
+    ) -> Tuple[List[float], List[float]]:
+        new_ttfts: List[float] = []
+        new_tpots: List[float] = []
+        for r in requests:
+            if not r.is_online:
+                continue
+            rid = r.request_id
+            if rid not in self._ttft_done:
+                t = r.ttft
+                if t is not None:
+                    self._ttft_done.add(rid)
+                    self.ttft_count += 1
+                    if t <= self.slo.ttft:
+                        self.ttft_attained += 1
+                    new_ttfts.append(t)
+            times = r.token_times
+            seen = self._seen.get(rid, 0)
+            n = len(times)
+            if n > seen:
+                for j in range(max(seen, 1), n):
+                    dt = times[j] - times[j - 1]
+                    self.tpot_count += 1
+                    if dt <= self.slo.tpot:
+                        self.tpot_attained += 1
+                    new_tpots.append(dt)
+                self._seen[rid] = n
+        return new_ttfts, new_tpots
+
+    @property
+    def ttft_attainment(self) -> float:
+        return self.ttft_attained / self.ttft_count if self.ttft_count else 1.0
+
+    @property
+    def tpot_attainment(self) -> float:
+        return self.tpot_attained / self.tpot_count if self.tpot_count else 1.0
 
 
 def summarize(

@@ -113,8 +113,40 @@ def run_real(args) -> None:
           f"ckpt_blocks={eng.ckpt.stats.blocks_checkpointed}")
 
 
+def _metrics_server(registry, port: int):
+    """Serve ``MetricsRegistry.render_text`` over HTTP (stdlib only) from a
+    daemon thread — the ``--metrics-port`` text endpoint (DESIGN.md §15).
+    Snapshots never block the engine thread, so scraping under load is
+    safe by construction."""
+    import http.server
+    import threading
+
+    class Handler(http.server.BaseHTTPRequestHandler):
+        def do_GET(self):  # noqa: N802 (stdlib API name)
+            body = registry.render_text().encode()
+            self.send_response(200)
+            self.send_header("Content-Type", "text/plain; version=0.0.4")
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def log_message(self, *a):  # quiet access log
+            pass
+
+    srv = http.server.ThreadingHTTPServer(("127.0.0.1", port), Handler)
+    threading.Thread(
+        target=srv.serve_forever, name="metrics-http", daemon=True
+    ).start()
+    return srv
+
+
 def run_wallclock(args) -> None:
-    """Calibrated wall-clock co-serving: engine thread + API thread."""
+    """Calibrated wall-clock co-serving: engine thread + API thread, with
+    the gateway surface live — per-token streaming consumers, bounded
+    admission with the selected backpressure policy, and the metrics
+    registry (printable with ``--metrics``, scrapable with
+    ``--metrics-port``)."""
+    import threading
     import time
 
     import jax
@@ -125,9 +157,9 @@ def run_wallclock(args) -> None:
     from repro.core.slo import SLO
     from repro.models import transformer as tf
     from repro.serving import loadgen
-    from repro.serving.api import Frontend
+    from repro.serving.api import Frontend, QueueFull, QueueTimeout
     from repro.serving.real_engine import RealEngine, RealEngineConfig
-    from repro.serving.runtime import CoServingRuntime
+    from repro.serving.runtime import CoServingRuntime, ServingConfig
 
     cfg = get_config(args.arch).reduced(num_layers=4, safepoint_interval=1)
     params = tf.init_params(cfg, jax.random.PRNGKey(args.seed))
@@ -150,37 +182,69 @@ def run_wallclock(args) -> None:
     ))
     eng.sched.slo = SLO(ttft=args.ttft or 3 * t_chunk, tpot=args.tpot)
 
-    rt = CoServingRuntime(eng)
+    rt = CoServingRuntime(
+        eng,
+        serving=ServingConfig(
+            policy=args.backpressure,
+            max_queued_online=args.max_queued_online,
+            max_queued_offline=args.max_queued_offline,
+            queue_timeout_s=args.queue_timeout,
+        ),
+    )
     fe = Frontend(rt, clock=rt.now)
+    srv = _metrics_server(rt.registry, args.metrics_port) \
+        if args.metrics_port else None
+    if srv is not None:
+        print(f"metrics endpoint: http://127.0.0.1:{args.metrics_port}/")
     rng = np.random.default_rng(args.seed)
     arrivals = loadgen.gamma_arrivals(args.rate, args.cv, args.duration, rng)
+    # per-token streaming consumers: one thread per stream iterates its
+    # TokenChannel (blocking, lossless) and tallies what it received
+    streamed: list = []
+    consumers: list = []
+
+    def consume(handle) -> None:
+        streamed.append(sum(1 for _tok in handle))
+
     rt.start()
+    shed = 0
+    streams = []
     try:
         job = fe.submit_batch(
             [rng.integers(0, cfg.vocab_size, args.prompt_len // 16)
              .astype(np.int32) for _ in range(args.offline)],
             max_new_tokens=args.max_new // 4,
         )
-        streams = []
         for t in arrivals:  # the API thread replays the online trace live
             while True:
                 gap = t - rt.now()
                 if gap <= 0:
                     break
                 time.sleep(min(0.005, gap))
-            streams.append(
-                fe.stream(
+            try:
+                h = fe.stream(
                     rng.integers(0, cfg.vocab_size, args.prompt_len // 32)
                     .astype(np.int32),
                     args.max_new // 8,
                 )
-            )
+            except (QueueFull, QueueTimeout):
+                shed += 1  # intentional load shedding, not an error
+                continue
+            streams.append(h)
+            th = threading.Thread(target=consume, args=(h,), daemon=True)
+            th.start()
+            consumers.append(th)
     finally:
         rt.stop(drain=True)
+    for th in consumers:
+        th.join(timeout=5.0)
     m = rt.metrics()
     print(f"arch={cfg.name} (reduced) wall-clock on {jax.default_backend()}")
     print(f"online streams={len(streams)} finished="
-          f"{sum(1 for h in streams if h.finished)}; batch done={job.done}")
+          f"{sum(1 for h in streams if h.finished)} shed={shed} "
+          f"policy={args.backpressure}; batch done={job.done}")
+    print(f"tokens streamed per-token: {sum(streamed)} "
+          f"(generated {sum(len(h.request.output_tokens) for h in streams)})")
     print(f"p99 TTFT {m.p99_ttft * 1e3:.0f} ms   p99 TPOT "
           f"{m.p99_tpot * 1e3:.1f} ms   attainment "
           f"{m.ttft_slo_attainment:.2f}/{m.tpot_slo_attainment:.2f}")
@@ -188,6 +252,11 @@ def run_wallclock(args) -> None:
           f"(online {m.online_throughput:.0f}, offline "
           f"{m.offline_throughput:.0f}); safepoint aborts "
           f"{rt.stats.safepoint_aborts}; preemptions {m.num_preemptions}")
+    if args.metrics:
+        print("--- metrics ---")
+        print(rt.registry.render_text(), end="")
+    if srv is not None:
+        srv.shutdown()
 
 
 def main() -> None:
@@ -211,6 +280,21 @@ def main() -> None:
     # size for the paged backend (needs >= tp visible devices, §11)
     ap.add_argument("--tp", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
+    # wallclock gateway surface (DESIGN.md §15)
+    ap.add_argument("--backpressure",
+                    choices=["queue-with-timeout", "reject-fast"],
+                    default="queue-with-timeout",
+                    help="ingress policy: block-to-deadline (503) or "
+                         "reject at capacity (429)")
+    ap.add_argument("--max-queued-online", type=int, default=64)
+    ap.add_argument("--max-queued-offline", type=int, default=256)
+    ap.add_argument("--queue-timeout", type=float, default=2.0,
+                    help="queue-with-timeout deadline (s)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the metrics registry at the end of the run")
+    ap.add_argument("--metrics-port", type=int, default=0,
+                    help="serve the metrics registry as text on "
+                         "127.0.0.1:PORT while running")
     args = ap.parse_args()
     if args.ttft is None and args.mode != "wallclock":
         args.ttft = 1.5

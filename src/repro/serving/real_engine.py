@@ -327,6 +327,17 @@ class RealEngine:
         self.host_gap_s: List[float] = []
         self.host_gap_count = 0
         self.host_gap_seconds = 0.0
+        # Calibration-drift instrumentation (DESIGN.md §15): cumulative
+        # measured step wall time vs the installed latency model's
+        # prediction for the same batch shapes.  The serial engine measures
+        # the full blocking iteration (plan dispatch through commit); the
+        # pipelined engine measures only the enqueue-side span (device
+        # compute overlaps the host), so its drift ratio sits below 1 by
+        # design.  Monotone accumulators — the runtime's metrics surface
+        # publishes the ratio as ``calibration_drift``.
+        self.measured_iter_seconds = 0.0
+        self.predicted_iter_seconds = 0.0
+        self.measured_iters = 0
         if self.paged:
             # Shared physical pools + one scratch row (id num_device_blocks)
             # that absorbs writes from padded batch rows / padded table
@@ -861,6 +872,8 @@ class RealEngine:
                 sched.online_q or sched.offline_q or sched.running or sched.preempted
             )
         self.steps += 1
+        t_iter0 = time.perf_counter()
+        predicted_s = self.sched.model.iter_time(plan.shape)
 
         aborted = False
         tokens: Dict[int, int] = {}
@@ -900,6 +913,9 @@ class RealEngine:
                         tokens[r.request_id] = int(toks[i])
 
         sched.commit(plan, self._clock(), aborted=aborted, tokens=tokens)
+        self.measured_iter_seconds += time.perf_counter() - t_iter0
+        self.predicted_iter_seconds += predicted_s
+        self.measured_iters += 1
         if not self.paged:
             for r in list(self.caches):
                 if not self.blocks.has_seq(r):
@@ -1288,6 +1304,8 @@ class RealEngine:
             sched.t_sched = now
             self._process_events()
         self.steps += 1
+        t_iter0 = time.perf_counter()
+        predicted_s = self.sched.model.iter_time(plan.shape)
 
         preemptible = (
             plan.pure_offline
@@ -1299,6 +1317,9 @@ class RealEngine:
         logits, aborted = self._dispatch_fused(*inputs, preemptible=preemptible)
         if aborted:
             sched.commit(plan, self._clock(), aborted=True, tokens={})
+            self.measured_iter_seconds += time.perf_counter() - t_iter0
+            self.predicted_iter_seconds += predicted_s
+            self.measured_iters += 1
             return True
 
         if samplers:
@@ -1321,6 +1342,9 @@ class RealEngine:
         # tokens without values (record_token(None)), the pending fetch
         # backfills output_tokens before anything on host reads them
         sched.commit(plan, self._clock(), aborted=False, tokens=None)
+        self.measured_iter_seconds += time.perf_counter() - t_iter0
+        self.predicted_iter_seconds += predicted_s
+        self.measured_iters += 1
 
         # All remaining post-work runs BEFORE the speculation snapshot so a
         # rollback only ever reverts the speculative plan's own mutations.

@@ -1,5 +1,7 @@
 """Wall-clock co-serving runtime: the unified scheduler driving RealEngine
-under real time (DESIGN.md §10).
+under real time (DESIGN.md §10), with the serving-gateway surface on top
+(DESIGN.md §15): per-request token streaming, bounded admission with typed
+backpressure, and a lock-light metrics registry.
 
 This is the loop that turns the policy stack into a *server*: each iteration
 it drains API-thread arrivals, lets ``UnifiedScheduler.plan_iteration`` build
@@ -20,6 +22,30 @@ extra duty is ``_flush_engine`` at replay end / ``stop``, which drains the
 engine's asynchronous artifacts (pending sampled-token readbacks and
 checkpoint copies) so metrics and emitted tokens are complete.
 
+Gateway surface (DESIGN.md §15):
+
+* **Streaming** — ``register_stream(req)`` hands out a ``TokenChannel``
+  the engine thread feeds after each iteration (``_pump_streams``), pushing
+  only *materialized* token values (``Request.output_tokens``), never the
+  structural count a pipelined engine runs ahead with.  A channel closes
+  only when its request is finished AND every token value has been pushed,
+  so iteration is lossless; ``stop``/``replay`` end always closes every
+  channel so consumers cannot deadlock.
+* **Backpressure** — ``submit`` runs against a per-class bounded ingress
+  queue (``ServingConfig``): ``reject-fast`` raises ``QueueFull`` (429)
+  with zero scheduler/KV state allocated; ``queue-with-timeout`` blocks the
+  caller through the injected sleep up to a deadline, then raises
+  ``QueueTimeout`` (503).  Online and offline budgets are separate, so an
+  offline flood can never starve online admission.  The measured depth is
+  undelivered ingress plus the scheduler's *waiting* queues as last
+  published by the engine thread — exact when the engine is idle, at most
+  one drain batch stale while it runs.
+* **Metrics** — ``_publish_metrics`` refreshes a ``MetricsRegistry`` every
+  iteration on the engine thread (queue depths, abort counts, per-class
+  token throughput, SLO attainment via the incremental ``SLOTracker``,
+  pool occupancy, prefix-cache hit rate, calibration drift, pipeline host
+  gap).  Snapshots never block the engine.
+
 Two ways to feed it:
 
 * ``replay(trace)`` — single-threaded trace replay: requests carry
@@ -39,17 +65,24 @@ raises ``AdmissionError`` to the API caller before it is ever queued.
 Clocks: the runtime rebases the engine clock to seconds-since-start so
 request timestamps (TTFT/TPOT) align with trace ``arrival_time`` offsets.
 Tests inject a ``ManualClock``; production uses ``time.perf_counter``.
+Every wait in the runtime — idle backoff, backpressure polling, the
+``stop`` drain wait, the ``start`` loop's idle sleep — goes through the
+injected ``self._sleep``, so a ``ManualClock``-driven runtime never
+busy-waits real time.
 """
 from __future__ import annotations
 
 import threading
 import time
+import warnings
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-from repro.core.request import Request
+from repro.core.request import Phase, Request
 from repro.core.scheduler import AdmissionError
-from repro.core.slo import ServiceMetrics, summarize
+from repro.core.slo import ServiceMetrics, SLOTracker, summarize
+from repro.serving.api import QueueFull, QueueTimeout, TokenChannel
+from repro.serving.metrics import MetricsRegistry
 
 
 class ManualClock:
@@ -74,6 +107,30 @@ class ManualClock:
 
 
 @dataclass
+class ServingConfig:
+    """Bounded-ingress gateway policy (DESIGN.md §15).
+
+    ``max_queued_*`` bound *waiting* work per priority class: undelivered
+    ingress plus the scheduler's waiting queue.  Running/preempted requests
+    hold device or host KV and are not counted — the bound exists to stop
+    unbounded queue growth, not to cap concurrency (the scheduler's token
+    budget does that).  Separate class budgets mean offline floods shed
+    offline load while online admission stays open (paper §4: harvesting
+    must never tax the online tier).
+    """
+
+    max_queued_online: int = 64
+    max_queued_offline: int = 256
+    policy: str = "queue-with-timeout"  # or "reject-fast"
+    queue_timeout_s: float = 2.0  # 503 deadline (queue-with-timeout)
+    backpressure_poll_s: float = 0.002  # capacity re-check cadence
+
+    def __post_init__(self):
+        if self.policy not in ("queue-with-timeout", "reject-fast"):
+            raise ValueError(f"unknown backpressure policy: {self.policy!r}")
+
+
+@dataclass
 class RuntimeStats:
     arrivals_delivered: int = 0
     rejected: int = 0  # replayed-trace requests failing admission
@@ -81,6 +138,8 @@ class RuntimeStats:
     # flag-set -> abort-observed latency per safepoint abort (Alg. 2
     # responsiveness, the real-execution twin of SimEngine's list)
     preemption_latencies: List[float] = field(default_factory=list)
+    # replay() hit max_steps with work remaining — metrics are partial
+    steps_exhausted: bool = False
 
 
 class CoServingRuntime:
@@ -96,6 +155,8 @@ class CoServingRuntime:
         clock: Optional[Callable[[], float]] = None,
         sleep: Optional[Callable[[float], None]] = None,
         idle_backoff_s: float = 0.0005,
+        serving: Optional[ServingConfig] = None,
+        registry: Optional[MetricsRegistry] = None,
     ):
         self.engine = engine
         self._clock = clock or time.perf_counter
@@ -103,6 +164,8 @@ class CoServingRuntime:
             clock.sleep if isinstance(clock, ManualClock) else time.sleep
         )
         self.idle_backoff_s = idle_backoff_s
+        self.serving = serving or ServingConfig()
+        self.registry = registry or MetricsRegistry()
         self.stats = RuntimeStats()
         self._t0 = self._clock()
         self._lock = threading.Lock()
@@ -114,6 +177,15 @@ class CoServingRuntime:
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
         self.duration = 0.0
+        # scheduler waiting/running/preempted depths as last published by
+        # the engine thread (under _lock) — API threads read these instead
+        # of touching scheduler lists cross-thread
+        self._sched_depths: Tuple[int, int, int, int] = (0, 0, 0, 0)
+        # request_id -> [request, channel, tokens_fed]; the fed count is
+        # mutated on the engine thread only
+        self._streams: Dict[int, list] = {}
+        self._slo_tracker = SLOTracker(engine.sched.slo)
+        self._prompt_tokens_delivered = 0
         engine.set_clock(self.now)
         engine.arrival_poll = self._drain_arrivals
 
@@ -130,23 +202,148 @@ class CoServingRuntime:
 
     # -------------------------------------------------------------- ingress
     def submit(self, req: Request) -> None:
-        """Thread-safe submission (either priority class).
+        """Thread-safe submission (either priority class) with bounded
+        ingress.
 
         Admission is validated *synchronously* on the calling thread —
         ``AdmissionError`` propagates to the API caller before the request
-        is queued, and no device state exists for it.
+        is queued, and no device state exists for it.  A full per-class
+        queue then raises ``QueueFull`` (reject-fast) or blocks to the
+        configured deadline before raising ``QueueTimeout``
+        (queue-with-timeout); both leave zero state behind.
         """
         self.engine.sched.check_admission(req)
-        if req.arrival_time == 0.0:
-            req.arrival_time = self.now()
-        with self._lock:
-            self._pending.append(req)
+        self._admit_bounded([req])
+
+    def submit_all(self, reqs: Sequence[Request]) -> None:
+        """All-or-nothing submission: admission-check every request, then
+        reserve ingress capacity for the whole pool atomically — a
+        ``QueueFull``/``QueueTimeout`` rejection queues none of them
+        (``Frontend.submit_batch`` binds to this)."""
+        for r in reqs:
+            self.engine.sched.check_admission(r)
+        self._admit_bounded(list(reqs))
 
     def on_online_arrival(self, req: Request) -> None:
         """Streaming-API entry (``Frontend`` binds to this).  The urgent
         Algorithm 2 decision runs on the engine thread at the next drain
         point — loop-top or a safepoint inside an in-flight batch."""
         self.submit(req)
+
+    def _queue_depths_locked(self) -> Tuple[int, int]:
+        """(online, offline) waiting depth; caller holds ``_lock``."""
+        pend_on = sum(1 for r in self._pending if r.is_online)
+        return (
+            pend_on + self._sched_depths[0],
+            (len(self._pending) - pend_on) + self._sched_depths[1],
+        )
+
+    def _admit_bounded(self, reqs: List[Request]) -> None:
+        cfg = self.serving
+        want_on = sum(1 for r in reqs if r.is_online)
+        want_off = len(reqs) - want_on
+        t_entry = self.now()  # queue wait counts against TTFT
+        deadline = self._clock() + cfg.queue_timeout_s
+        cls = "online" if want_on else "offline"
+        while True:
+            with self._lock:
+                depth_on, depth_off = self._queue_depths_locked()
+                if (
+                    depth_on + want_on <= cfg.max_queued_online
+                    and depth_off + want_off <= cfg.max_queued_offline
+                ):
+                    for r in reqs:
+                        if r.arrival_time == 0.0:
+                            r.arrival_time = t_entry
+                        self._pending.append(r)
+                    # ingress counters: multiple API threads write these, so
+                    # they are serialized by the ingress lock (the registry
+                    # itself is lock-free on the value path)
+                    if want_on:
+                        self.registry.counter(
+                            "ingress_submitted_total_online"
+                        ).inc(want_on)
+                    if want_off:
+                        self.registry.counter(
+                            "ingress_submitted_total_offline"
+                        ).inc(want_off)
+                    return
+            if cfg.policy == "reject-fast":
+                with self._lock:
+                    self.registry.counter(
+                        f"ingress_queue_full_total_{cls}"
+                    ).inc()
+                raise QueueFull(
+                    f"{cls} ingress queue full "
+                    f"(online {depth_on}/{cfg.max_queued_online}, "
+                    f"offline {depth_off}/{cfg.max_queued_offline})"
+                )
+            if self._clock() >= deadline:
+                with self._lock:
+                    self.registry.counter(
+                        f"ingress_queue_timeout_total_{cls}"
+                    ).inc()
+                raise QueueTimeout(
+                    f"{cls} ingress capacity did not free within "
+                    f"{cfg.queue_timeout_s:.3f}s "
+                    f"(online {depth_on}/{cfg.max_queued_online}, "
+                    f"offline {depth_off}/{cfg.max_queued_offline})"
+                )
+            self._sleep(cfg.backpressure_poll_s)
+
+    # ------------------------------------------------------------ streaming
+    def register_stream(self, req: Request) -> TokenChannel:
+        """Create the per-request token channel (``Frontend.stream`` calls
+        this *before* submitting, so no committed token can race past it)."""
+        ch = TokenChannel()
+        with self._lock:
+            self._streams[req.request_id] = [req, ch, 0]
+        return ch
+
+    def unregister_stream(self, req: Request) -> None:
+        with self._lock:
+            self._streams.pop(req.request_id, None)
+
+    def _pump_streams(self) -> None:
+        """Engine thread (and shutdown paths): push newly *materialized*
+        token values to each registered channel, closing channels whose
+        request is finished with every value pushed.
+
+        Feeds from ``Request.output_tokens`` only — a pipelined engine's
+        structural commits (``num_generated``) can run ahead of token-value
+        readbacks, and the lossless contract is about values.  End-of-stream
+        therefore requires ``fed == num_generated == len(output_tokens)``,
+        which ``_flush_engine`` guarantees is reachable at shutdown.
+        """
+        with self._lock:
+            entries = list(self._streams.values())
+        done_ids = []
+        for entry in entries:
+            req, ch, fed = entry
+            toks = req.output_tokens
+            n = len(toks)
+            if n > fed:
+                ch.push(toks[fed:n])
+                entry[2] = fed = n
+            if (
+                req.phase == Phase.FINISHED
+                and fed == req.num_generated == len(req.output_tokens)
+            ):
+                ch.close()
+                done_ids.append(req.request_id)
+        if done_ids:
+            with self._lock:
+                for rid in done_ids:
+                    self._streams.pop(rid, None)
+
+    def _close_all_streams(self) -> None:
+        """Shutdown backstop: close every remaining channel (even for
+        unfinished requests) so blocked consumers always wake up."""
+        with self._lock:
+            entries = list(self._streams.values())
+            self._streams.clear()
+        for _req, ch, _fed in entries:
+            ch.close()
 
     # ---------------------------------------------------------------- drain
     def _drain_arrivals(self) -> None:
@@ -178,8 +375,17 @@ class CoServingRuntime:
                 # replayed traces may contain oversized requests; direct
                 # submitters got the error synchronously in submit()
                 self.stats.rejected += 1
+                self.registry.counter("ingress_admission_rejected_total").inc()
                 continue
             self.stats.arrivals_delivered += 1
+            self._prompt_tokens_delivered += r.prompt_len
+        if due:
+            # republish scheduler depths at delivery time, not just after the
+            # step: stop(drain)'s wait must see this work as busy even while
+            # the (possibly long) iteration that admits it is still running
+            depths = self.engine.sched.queue_depths()
+            with self._lock:
+                self._sched_depths = depths
 
     def _flush_engine(self) -> None:
         """Drain the engine's asynchronous pipeline artifacts (pending
@@ -190,6 +396,18 @@ class CoServingRuntime:
             flush()
 
     def _observe_aborts(self) -> None:
+        """Track Algorithm 2 responsiveness.
+
+        The trigger timestamp is set when a drained online arrival flips the
+        preemption flag.  It must survive steps in which no abort lands yet:
+        a flag set at a late safepoint (or at loop-top of a non-preemptible
+        iteration) is consumed only at a *later* boundary, and clearing the
+        trigger unconditionally would record no latency for that abort.  So
+        the trigger is cleared only (a) when the matching abort is observed
+        (latency recorded), or (b) when the engine consumed the flag without
+        aborting — e.g. the online request was admitted into the next plan
+        normally — in which case no abort will ever match it.
+        """
         aborts = self.engine.safepoints.stats.preemptions
         if aborts > self._aborts_seen:
             self.stats.safepoint_aborts += aborts - self._aborts_seen
@@ -198,7 +416,86 @@ class CoServingRuntime:
                 self.stats.preemption_latencies.append(
                     self.now() - self._abort_trigger_t
                 )
-        self._abort_trigger_t = None
+                self._abort_trigger_t = None
+        elif self._abort_trigger_t is not None and not self.engine.flag.is_set():
+            self._abort_trigger_t = None
+
+    # -------------------------------------------------------------- metrics
+    def _publish_metrics(self) -> None:
+        """Refresh the registry from engine/scheduler state.  Engine thread
+        (plus the shutdown paths, after the engine thread has exited) — all
+        value writes are single-writer, so the registry needs no locks."""
+        eng = self.engine
+        sched = eng.sched
+        reg = self.registry
+        depths = sched.queue_depths()
+        with self._lock:
+            self._sched_depths = depths
+        reg.gauge("queue_depth_online").set(depths[0])
+        reg.gauge("queue_depth_offline").set(depths[1])
+        reg.gauge("running_seqs").set(depths[2])
+        reg.gauge("preempted_seqs").set(depths[3])
+        reg.counter("iterations_total").set_to(eng.steps)
+        sp = eng.safepoints.stats
+        reg.counter("aborted_iterations_total").set_to(sp.preemptions)
+        reg.counter("safepoint_checks_total").set_to(sp.checks)
+        # per-class token totals (monotone envelopes: a preemption resets a
+        # request's num_prefilled, so raw processed sums can dip; set_to
+        # keeps the counter at the high-water mark)
+        gen_on = gen_off = proc_on = proc_off = 0
+        requests = sched.all_requests()
+        for r in requests:
+            proc = min(r.num_prefilled, r.prompt_len) + r.num_generated
+            if r.is_online:
+                gen_on += r.num_generated
+                proc_on += proc
+            else:
+                gen_off += r.num_generated
+                proc_off += proc
+        reg.counter("tokens_generated_total_online").set_to(gen_on)
+        reg.counter("tokens_generated_total_offline").set_to(gen_off)
+        reg.counter("tokens_processed_total_online").set_to(proc_on)
+        reg.counter("tokens_processed_total_offline").set_to(proc_off)
+        # SLO attainment, incremental and identical to summarize()'s values
+        new_ttfts, new_tpots = self._slo_tracker.observe(requests)
+        if new_ttfts:
+            h = reg.histogram("ttft_seconds")
+            for t in new_ttfts:
+                h.observe(t)
+        if new_tpots:
+            h = reg.histogram("tpot_seconds")
+            for t in new_tpots:
+                h.observe(t)
+        reg.gauge("slo_ttft_attainment").set(self._slo_tracker.ttft_attainment)
+        reg.gauge("slo_tpot_attainment").set(self._slo_tracker.tpot_attainment)
+        # KV pool + prefix cache
+        blocks = sched.blocks
+        reg.gauge("pool_occupancy").set(blocks.device_utilization)
+        reg.gauge("pool_cached_free_blocks").set(blocks.cached_free_blocks)
+        saved = getattr(blocks, "prefix_tokens_saved", 0)
+        reg.counter("prefix_tokens_saved_total").set_to(saved)
+        reg.gauge("prefix_cache_hit_rate").set(
+            saved / max(1, self._prompt_tokens_delivered)
+        )
+        # calibration drift: measured wall time per iteration vs what the
+        # installed latency model predicted for the same shapes (pipelined
+        # engines report enqueue-side time, so drift < 1 is expected there)
+        measured = getattr(eng, "measured_iter_seconds", 0.0)
+        predicted = getattr(eng, "predicted_iter_seconds", 0.0)
+        reg.counter("iter_measured_seconds_total").set_to(measured)
+        reg.counter("iter_predicted_seconds_total").set_to(predicted)
+        if predicted > 0.0:
+            reg.gauge("calibration_drift").set(measured / predicted)
+        # async pipeline (§13)
+        reg.counter("host_gap_seconds_total").set_to(
+            getattr(eng, "host_gap_seconds", 0.0)
+        )
+        reg.counter("host_gap_count_total").set_to(
+            getattr(eng, "host_gap_count", 0)
+        )
+        reg.counter("pipeline_discards_total").set_to(
+            getattr(eng, "pipeline_discards", 0)
+        )
 
     # ----------------------------------------------------------------- loop
     def _step_once(self) -> bool:
@@ -208,6 +505,8 @@ class CoServingRuntime:
         before = self.engine.steps
         alive = self.engine.step()
         self._observe_aborts()
+        self._pump_streams()
+        self._publish_metrics()
         if alive and self.engine.steps == before:
             # work exists but nothing was schedulable (e.g. memory wedged
             # behind a pending resume): back off instead of spinning
@@ -227,10 +526,15 @@ class CoServingRuntime:
         start; the loop sleeps through genuinely idle gaps.  With ``drain``
         (default) requests in flight at ``duration`` run to completion —
         pass ``drain=False`` to cut off at ``duration`` sharp.
+
+        If ``max_steps`` elapses with work remaining the partial return is
+        made loud: ``stats.steps_exhausted`` is set and a ``RuntimeWarning``
+        is emitted (metrics over an unfinished replay understate latency).
         """
         self._trace = sorted(trace, key=lambda r: r.arrival_time)
         self._trace_pos = 0
         self._t0 = self._clock()
+        self.stats.steps_exhausted = False
         for _ in range(max_steps):
             now = self.now()
             if duration is not None and now >= duration and not drain:
@@ -247,8 +551,19 @@ class CoServingRuntime:
                         self._sleep(gap)
                     continue
                 break
+        else:
+            self.stats.steps_exhausted = True
+            warnings.warn(
+                f"replay exhausted max_steps={max_steps} with work remaining; "
+                "returned metrics cover a partial replay",
+                RuntimeWarning,
+                stacklevel=2,
+            )
         self._flush_engine()
+        self._pump_streams()
+        self._close_all_streams()
         self.duration = self.now()
+        self._publish_metrics()
         return self.metrics()
 
     # -------------------------------------------------------- threaded mode
@@ -265,7 +580,9 @@ class CoServingRuntime:
             while not self._stop.is_set():
                 if not self._step_once():
                     # nothing to do: wait for arrivals without burning CPU
-                    time.sleep(self.idle_backoff_s)
+                    # (through the injected sleep — a ManualClock runtime
+                    # must not busy-wait real time)
+                    self._sleep(self.idle_backoff_s)
 
         self._thread = threading.Thread(
             target=loop, name="coserve-engine", daemon=True
@@ -274,29 +591,33 @@ class CoServingRuntime:
 
     def stop(self, drain: bool = True, timeout: float = 60.0) -> None:
         """Stop the engine thread; with ``drain`` (default), first wait for
-        all in-flight and queued work to finish."""
+        all in-flight and queued work to finish.
+
+        The drain check reads undelivered ingress plus the engine-published
+        scheduler depth snapshot — never the scheduler's lists directly,
+        which only the engine thread may touch.  All waiting goes through
+        the injected clock/sleep.  Every registered stream channel is closed
+        on the way out (lossless if drained; a cut-off stream still wakes
+        its consumer).
+        """
         if self._thread is None:
             return
         if drain:
-            deadline = time.monotonic() + timeout
-            while time.monotonic() < deadline:
+            deadline = self._clock() + timeout
+            while self._clock() < deadline:
                 with self._lock:
-                    pending = bool(self._pending)
-                s = self.engine.sched
-                if not (
-                    pending
-                    or s.online_q
-                    or s.offline_q
-                    or s.running
-                    or s.preempted
-                ):
+                    busy = bool(self._pending) or any(self._sched_depths)
+                if not busy:
                     break
-                time.sleep(self.idle_backoff_s)
+                self._sleep(self.idle_backoff_s)
         self._stop.set()
         self._thread.join(timeout=timeout)
         self._thread = None
         self._flush_engine()
+        self._pump_streams()
+        self._close_all_streams()
         self.duration = self.now()
+        self._publish_metrics()
 
     # -------------------------------------------------------------- metrics
     def metrics(self, duration: Optional[float] = None) -> ServiceMetrics:

@@ -1,0 +1,455 @@
+"""Serving-gateway tests (DESIGN.md §15): per-token streaming, bounded
+admission with typed backpressure, and the lock-light metrics surface.
+
+The threaded integration test is the acceptance scenario: a Frontend bound
+to a CoServingRuntime streams tokens per-token under concurrent online +
+offline load, under BOTH backpressure policies, losslessly — and the greedy
+tokens are bitwise identical to a plain single-threaded engine run over the
+same prompts (streaming/backpressure must not perturb execution).
+Deterministic pieces (queue timeout, reject-fast, SLOTracker) run under a
+ManualClock with no engine thread at all.
+"""
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.request import Phase, Priority, Request
+from repro.core.slo import SLO, SLOTracker, summarize
+from repro.models import transformer as tf
+from repro.serving.api import (
+    Frontend,
+    QueueFull,
+    QueueTimeout,
+    StreamHandle,
+    TokenChannel,
+)
+from repro.serving.metrics import Counter, Gauge, Histogram, MetricsRegistry
+from repro.serving.real_engine import RealEngine, RealEngineConfig
+from repro.serving.runtime import CoServingRuntime, ManualClock, ServingConfig
+
+CFG = get_config("llama-2-7b").reduced()
+PARAMS = tf.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def mkengine(**eng_kw):
+    eng_kw.setdefault("max_model_len", 128)
+    eng_kw.setdefault("num_device_blocks", 128)
+    return RealEngine(
+        CFG, PARAMS, eng_cfg=RealEngineConfig(**eng_kw),
+        slo=SLO(ttft=1.5, tpot=0.110),
+    )
+
+
+def mkreq(prio, plen, gen, seed):
+    prompt = (
+        np.random.default_rng(seed)
+        .integers(0, CFG.vocab_size, plen)
+        .astype(np.int32)
+    )
+    return Request(prio, prompt_len=plen, max_new_tokens=gen, prompt=prompt)
+
+
+# ---------------------------------------------------------------------------
+# metrics registry unit behavior
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_primitives():
+    c = Counter("c")
+    c.inc()
+    c.inc(2)
+    assert c.get() == 3
+    c.set_to(10)
+    assert c.get() == 10
+    c.set_to(5)  # monotone: refuses to go backwards
+    assert c.get() == 10
+    with pytest.raises(ValueError):
+        c.inc(-1)
+
+    g = Gauge("g")
+    g.set(4)
+    g.set(2.5)
+    assert g.get() == 2.5
+
+    h = Histogram("h", bounds=(0.1, 1.0, 10.0))
+    for v in (0.05, 0.5, 0.5, 5.0, 50.0):
+        h.observe(v)
+    assert h.count == 5
+    assert abs(h.sum - 56.05) < 1e-9
+    assert 0.1 <= h.percentile(50) <= 1.0
+    assert h.percentile(99) == 10.0  # overflow bucket reports last bound
+    assert Histogram("e").percentile(50) == 0.0
+
+
+def test_registry_snapshot_and_render():
+    reg = MetricsRegistry()
+    reg.counter("a_total").inc(3)
+    reg.gauge("depth").set(7)
+    reg.histogram("lat").observe(0.02)
+    snap = reg.snapshot()
+    assert snap["a_total"] == 3
+    assert snap["depth"] == 7
+    assert snap["lat_count"] == 1 and snap["lat_sum"] == 0.02
+    assert "lat_p50" in snap and "lat_p99" in snap
+    # get-or-create returns the same object; snapshot is a plain dict copy
+    assert reg.counter("a_total") is reg.counter("a_total")
+    text = reg.render_text()
+    assert "a_total 3\n" in text and "depth 7\n" in text
+
+
+def test_snapshot_cheap_and_nonblocking_under_writes():
+    """Counters stay monotone and snapshots stay cheap while a writer
+    thread hammers the registry — the engine-thread contract."""
+    reg = MetricsRegistry()
+    stop = threading.Event()
+
+    def writer():
+        c = reg.counter("w_total")
+        g = reg.gauge("w_gauge")
+        h = reg.histogram("w_lat")
+        i = 0
+        while not stop.is_set():
+            c.inc()
+            g.set(i % 17)
+            h.observe((i % 100) / 1000.0)
+            i += 1
+
+    th = threading.Thread(target=writer, daemon=True)
+    th.start()
+    try:
+        last = -1.0
+        t0 = time.monotonic()
+        for _ in range(200):
+            snap = reg.snapshot()
+            v = snap.get("w_total", 0.0)
+            assert v >= last, "counter went backwards across snapshots"
+            last = v
+        elapsed = time.monotonic() - t0
+        assert elapsed < 5.0, f"200 snapshots took {elapsed:.2f}s"
+    finally:
+        stop.set()
+        th.join(timeout=2.0)
+    assert reg.snapshot()["w_total"] > 0
+
+
+# ---------------------------------------------------------------------------
+# SLOTracker: incremental attainment identical to summarize()
+# ---------------------------------------------------------------------------
+
+
+def test_slo_tracker_matches_summarize():
+    slo = SLO(ttft=0.5, tpot=0.1)
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(6):
+        r = Request(
+            Priority.ONLINE if i % 2 == 0 else Priority.OFFLINE,
+            prompt_len=8, max_new_tokens=4, arrival_time=0.1 * i,
+        )
+        t = r.arrival_time + float(rng.uniform(0.05, 1.0))
+        for _ in range(4):
+            r.record_token(t)
+            t += float(rng.uniform(0.01, 0.3))
+        reqs.append(r)
+
+    tracker = SLOTracker(slo)
+    # observe in three passes over growing views — same values, once each
+    tracker.observe(reqs[:2])
+    tracker.observe(reqs[:4])
+    tracker.observe(reqs)
+    tracker.observe(reqs)  # idempotent re-observation
+    m = summarize(reqs, slo, duration=10.0)
+    assert abs(tracker.ttft_attainment - m.ttft_slo_attainment) < 1e-12
+    assert abs(tracker.tpot_attainment - m.tpot_slo_attainment) < 1e-12
+    # empty-set convention matches summarize (1.0 with no samples)
+    assert SLOTracker(slo).ttft_attainment == 1.0
+    assert SLOTracker(slo).tpot_attainment == 1.0
+
+
+# ---------------------------------------------------------------------------
+# TokenChannel + StreamHandle contracts
+# ---------------------------------------------------------------------------
+
+
+def test_token_channel_lossless_across_close():
+    ch = TokenChannel()
+    got = []
+    done = threading.Event()
+
+    def consume():
+        for tok in ch:
+            got.append(tok)
+        done.set()
+
+    th = threading.Thread(target=consume, daemon=True)
+    th.start()
+    for i in range(20):
+        ch.push([i])
+        if i % 5 == 0:
+            time.sleep(0.001)
+    ch.close()  # close races the consumer's drain — nothing may be lost
+    assert done.wait(5.0)
+    assert got == list(range(20))
+    assert ch.pushes == 20
+    # get() after close-and-drain returns [] (not None), push raises
+    assert ch.get(timeout=0.01) == []
+    with pytest.raises(RuntimeError):
+        ch.push([99])
+
+
+def test_token_channel_get_timeout():
+    ch = TokenChannel()
+    assert ch.get(timeout=0.01) is None  # open + empty -> timeout
+    ch.push([1, 2])
+    assert ch.get(timeout=0.01) == [1, 2]
+
+
+def test_stream_poll_after_finish_returns_tail():
+    """The documented poll-mode contract: tokens landing between the last
+    poll and the finished check are returned by one final poll — the
+    `while not finished: poll()` idiom alone drops them."""
+    req = Request(Priority.ONLINE, prompt_len=4, max_new_tokens=3)
+    h = StreamHandle(req)
+    req.record_token(0.1, 7)
+    assert h.poll() == [7]
+    # two tokens land *after* the poll, the second finishes the request
+    req.record_token(0.2, 8)
+    req.record_token(0.3, 9)
+    assert h.finished
+    assert h.poll() == [8, 9]  # final drain recovers the tail
+    assert h.poll() == []
+    # iterator over an already-finished poll-mode handle drains losslessly
+    h2 = StreamHandle(req)
+    assert list(h2) == [7, 8, 9]
+    assert h2.result() == [7, 8, 9]
+
+
+def test_stream_iter_without_runtime_raises_while_unfinished():
+    req = Request(Priority.ONLINE, prompt_len=4, max_new_tokens=3)
+    req.record_token(0.1, 7)
+    h = StreamHandle(req)
+    it = iter(h)
+    assert next(it) == 7
+    with pytest.raises(RuntimeError, match="CoServingRuntime"):
+        next(it)  # unfinished, no channel: cannot block
+
+
+# ---------------------------------------------------------------------------
+# bounded admission: deterministic policy tests (no engine thread)
+# ---------------------------------------------------------------------------
+
+
+def test_queue_with_timeout_honored_under_manual_clock():
+    eng = mkengine()
+    clock = ManualClock()
+    rt = CoServingRuntime(
+        eng, clock=clock,
+        serving=ServingConfig(
+            max_queued_online=1, policy="queue-with-timeout",
+            queue_timeout_s=0.5, backpressure_poll_s=0.01,
+        ),
+    )
+    rt.submit(mkreq(Priority.ONLINE, 16, 4, 0))  # fills the online budget
+    t0 = clock.t
+    with pytest.raises(QueueTimeout):
+        rt.submit(mkreq(Priority.ONLINE, 16, 4, 1))
+    waited = clock.t - t0
+    # blocked in manual time until the deadline (within one poll tick)
+    assert 0.5 <= waited <= 0.5 + 0.01 + 1e-9
+    with rt._lock:
+        assert len(rt._pending) == 1  # the rejected request queued nothing
+    snap = rt.registry.snapshot()
+    assert snap["ingress_queue_timeout_total_online"] == 1
+    assert snap["ingress_submitted_total_online"] == 1
+
+
+def test_reject_fast_leaves_zero_state():
+    eng = mkengine()
+    rt = CoServingRuntime(
+        eng, clock=ManualClock(),
+        serving=ServingConfig(max_queued_offline=2, policy="reject-fast"),
+    )
+    fe = Frontend(rt, clock=rt.now)
+    rng = np.random.default_rng(0)
+    prompts = [
+        rng.integers(0, CFG.vocab_size, 16).astype(np.int32) for _ in range(2)
+    ]
+    fe.submit_batch(prompts, max_new_tokens=4)
+    with pytest.raises(QueueFull):
+        rt.submit(mkreq(Priority.OFFLINE, 16, 4, 9))
+    # zero scheduler/KV state for the rejected request — and the queued ones
+    # are still only in the runtime's ingress (engine thread never ran)
+    assert eng.blocks.used_device_blocks == 0
+    assert not eng.sched.offline_q and not eng.sched.online_q
+    with rt._lock:
+        assert len(rt._pending) == 2
+    # batch submission is all-or-nothing against the bound too
+    with pytest.raises(QueueFull):
+        fe.submit_batch(prompts, max_new_tokens=4)
+    with rt._lock:
+        assert len(rt._pending) == 2
+    assert rt.registry.snapshot()["ingress_queue_full_total_offline"] == 2
+
+
+def test_online_admission_survives_offline_flood():
+    eng = mkengine()
+    rt = CoServingRuntime(
+        eng, clock=ManualClock(),
+        serving=ServingConfig(
+            max_queued_online=4, max_queued_offline=4, policy="reject-fast",
+        ),
+    )
+    for s in range(4):
+        rt.submit(mkreq(Priority.OFFLINE, 16, 4, s))
+    with pytest.raises(QueueFull):
+        rt.submit(mkreq(Priority.OFFLINE, 16, 4, 99))  # flood is shed...
+    online = mkreq(Priority.ONLINE, 16, 4, 100)
+    rt.submit(online)  # ...but the online class admits normally
+    with rt._lock:
+        assert online in rt._pending
+
+
+def test_bad_policy_rejected():
+    with pytest.raises(ValueError):
+        ServingConfig(policy="drop-everything")
+
+
+# ---------------------------------------------------------------------------
+# threaded integration: lossless per-token streaming under load, both
+# policies, with a live scraper — and bitwise-identical greedy tokens vs a
+# plain single-threaded engine run (the differential leg)
+# ---------------------------------------------------------------------------
+
+
+def _reference_tokens(online_specs, offline_specs):
+    """Plain single-threaded engine over the same prompts (greedy)."""
+    eng = mkengine()
+    reqs = [mkreq(Priority.ONLINE, p, g, s) for (p, g, s) in online_specs]
+    reqs += [mkreq(Priority.OFFLINE, p, g, s) for (p, g, s) in offline_specs]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    return [list(r.output_tokens) for r in reqs]
+
+
+@pytest.mark.parametrize("policy", ["queue-with-timeout", "reject-fast"])
+def test_threaded_streaming_lossless_under_load(policy):
+    online_specs = [(16, 4, 0), (24, 4, 1), (20, 4, 2)]
+    offline_specs = [(24, 4, 10), (32, 4, 11)]
+    ref = _reference_tokens(online_specs, offline_specs)
+
+    eng = mkengine()
+    rt = CoServingRuntime(
+        eng,
+        serving=ServingConfig(policy=policy),  # generous default bounds
+    )
+    fe = Frontend(rt, clock=rt.now)
+
+    collected = {i: [] for i in range(len(online_specs))}
+    consumers = []
+
+    def consume(idx, handle):
+        for tok in handle:  # blocking per-token iteration
+            collected[idx].append(tok)
+
+    snaps = []
+    scrape_stop = threading.Event()
+
+    def scrape():
+        while not scrape_stop.is_set():
+            snaps.append(rt.registry.snapshot())
+            time.sleep(0.01)
+
+    scraper = threading.Thread(target=scrape, daemon=True)
+    rt.start()
+    scraper.start()
+    try:
+        # offline load first, then the online streams land on top
+        offline_reqs = [
+            mkreq(Priority.OFFLINE, p, g, s) for (p, g, s) in offline_specs
+        ]
+        rt.submit_all(offline_reqs)
+        handles = []
+        for i, (p, g, s) in enumerate(online_specs):
+            prompt = (
+                np.random.default_rng(s)
+                .integers(0, CFG.vocab_size, p)
+                .astype(np.int32)
+            )
+            h = fe.stream(prompt, g)
+            assert h.channel is not None  # runtime-bound -> channel mode
+            th = threading.Thread(target=consume, args=(i, h), daemon=True)
+            th.start()
+            consumers.append(th)
+            handles.append(h)
+    finally:
+        rt.stop(drain=True)
+        scrape_stop.set()
+    for th in consumers:
+        th.join(timeout=10.0)
+        assert not th.is_alive(), "stream consumer did not terminate"
+    scraper.join(timeout=2.0)
+
+    # lossless per-token delivery: every generated token, in order
+    for i, h in enumerate(handles):
+        assert h.finished
+        assert collected[i] == list(h.request.output_tokens)
+        assert len(collected[i]) == online_specs[i][1]
+        # per-token granularity, not one end-of-request blob
+        assert h.channel.pushes >= 2
+    assert all(r.phase == Phase.FINISHED for r in offline_reqs)
+
+    # differential leg: greedy tokens bitwise identical to the plain
+    # single-threaded engine (streaming/backpressure perturbs nothing)
+    got = [list(h.request.output_tokens) for h in handles]
+    got += [list(r.output_tokens) for r in offline_reqs]
+    assert got == ref
+
+    # scraper saw monotone counters; final gauges agree with ServiceMetrics
+    final = rt.registry.snapshot()
+    prev = -1.0
+    for s in snaps + [final]:
+        v = s.get("iterations_total", 0.0)
+        assert v >= prev
+        prev = v
+    m = rt.metrics()
+    assert abs(final["slo_ttft_attainment"] - m.ttft_slo_attainment) < 1e-9
+    assert abs(final["slo_tpot_attainment"] - m.tpot_slo_attainment) < 1e-9
+    assert final["queue_depth_online"] == 0
+    assert final["queue_depth_offline"] == 0
+    assert final["tokens_generated_total_online"] == sum(
+        g for (_p, g, _s) in online_specs
+    )
+
+
+def test_threaded_stop_closes_unfinished_streams():
+    """Shutdown backstop: stop() without drain must still close channels so
+    blocked consumers wake up (possibly mid-stream)."""
+    eng = mkengine()
+    rt = CoServingRuntime(eng)
+    fe = Frontend(rt, clock=rt.now)
+    rt.start()
+    h = fe.stream(
+        np.random.default_rng(0)
+        .integers(0, CFG.vocab_size, 16)
+        .astype(np.int32),
+        64,  # long generation we will cut off
+    )
+    done = threading.Event()
+    got = []
+
+    def consume():
+        for tok in h:
+            got.append(tok)
+        done.set()
+
+    th = threading.Thread(target=consume, daemon=True)
+    th.start()
+    time.sleep(0.3)  # let a few tokens flow
+    rt.stop(drain=False)
+    assert done.wait(5.0), "consumer still blocked after stop()"
+    assert got == list(h.request.output_tokens)  # prefix, no invented tokens

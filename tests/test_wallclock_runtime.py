@@ -88,9 +88,110 @@ def test_online_arrival_aborts_offline_batch_at_safepoint():
     assert len(online.output_tokens) == 4
     # the abort must not perturb offline results (token identity, §7)
     assert [r.output_tokens for r in reqs] == [r.output_tokens for r in ref]
+    # every observed abort records exactly one preemption latency — the
+    # trigger may only be cleared by a matching abort (or flag clear)
+    assert (
+        len(rt.stats.preemption_latencies) == rt.stats.safepoint_aborts
+    )
     if not CPU_ONLY:  # wall-clock-sensitive: skip on CPU-only runners
         assert rt.stats.preemption_latencies
         assert min(rt.stats.preemption_latencies) < 0.1
+
+
+def test_abort_trigger_survives_until_matching_abort():
+    """Regression: a flag set at a late safepoint is consumed only at a
+    *later* boundary; clearing the trigger timestamp unconditionally at the
+    end of every step recorded no latency for that abort."""
+    eng = mkengine()
+    clock = ManualClock(auto_tick=1e-3)
+    rt = CoServingRuntime(eng, clock=clock)
+
+    # flag set (by a drained online arrival), no abort yet this step: the
+    # trigger must survive _observe_aborts
+    rt._abort_trigger_t = rt.now()
+    eng.flag.set()
+    rt._observe_aborts()
+    assert rt._abort_trigger_t is not None
+    assert rt.stats.preemption_latencies == []
+
+    # the abort lands on a later step: latency recorded, trigger consumed
+    eng.safepoints.stats.preemptions += 1
+    rt._observe_aborts()
+    assert rt._abort_trigger_t is None
+    assert len(rt.stats.preemption_latencies) == 1
+    assert rt.stats.safepoint_aborts == 1
+    assert rt.stats.preemption_latencies[0] >= 0.0
+
+    # flag consumed WITHOUT an abort (online admitted into the next plan
+    # normally): no abort will ever match — the stale trigger must clear
+    rt._abort_trigger_t = rt.now()
+    eng.flag.clear()
+    rt._observe_aborts()
+    assert rt._abort_trigger_t is None
+    assert len(rt.stats.preemption_latencies) == 1  # unchanged
+
+
+def test_runtime_waits_route_through_injected_sleep():
+    """Regression: start()'s idle loop and stop()'s drain wait used
+    time.sleep directly, so a ManualClock-driven runtime busy-waited real
+    time.  Every wait must go through the injected sleep."""
+    import threading
+    import time as _time
+
+    eng = mkengine()
+    clock = ManualClock()
+    sleeps = []
+
+    def fake_sleep(dt):
+        sleeps.append(dt)
+        clock.advance(dt)
+
+    rt = CoServingRuntime(eng, clock=clock, sleep=fake_sleep)
+
+    # start(): idle loop with no work must wait via the injected sleep
+    rt.start()
+    t0 = _time.monotonic()
+    while not sleeps and _time.monotonic() - t0 < 5.0:
+        _time.sleep(0.001)
+    assert sleeps, "idle engine loop never called the injected sleep"
+    rt.stop(drain=True)
+
+    # stop(drain=True): the drain wait must also use the injected clock +
+    # sleep.  Publish a nonzero depth snapshot so the wait cannot satisfy,
+    # and rely on the manual clock reaching the deadline — with a real
+    # time.sleep this would stall ~0.05 s of *wall* time instead of manual
+    # time (and with the old time.monotonic() deadline it would never use
+    # the manual clock at all).
+    clock2 = ManualClock()
+
+    def fake_sleep2(dt):
+        sleeps.append(dt)
+        clock2.advance(dt)
+
+    rt2 = CoServingRuntime(mkengine(), clock=clock2, sleep=fake_sleep2)
+    rt2._sched_depths = (1, 0, 0, 0)
+    rt2._thread = threading.Thread(target=lambda: None)
+    rt2._thread.start()
+    n_before = len(sleeps)
+    t0 = _time.monotonic()
+    rt2.stop(drain=True, timeout=0.05)
+    assert _time.monotonic() - t0 < 2.0  # manual time, not wall time
+    assert len(sleeps) > n_before
+
+
+def test_replay_max_steps_exhaustion_is_loud():
+    eng = mkengine()
+    rt = CoServingRuntime(eng, clock=ManualClock(auto_tick=1e-4))
+    req = mkreq(Priority.OFFLINE, 24, 16, 0)
+    with pytest.warns(RuntimeWarning, match="max_steps"):
+        rt.replay([req], max_steps=2)
+    assert rt.stats.steps_exhausted
+
+    # a replay that completes resets the flag and stays silent
+    eng2 = mkengine()
+    rt2 = CoServingRuntime(eng2, clock=ManualClock(auto_tick=1e-4))
+    rt2.replay([mkreq(Priority.OFFLINE, 20, 4, 1)])
+    assert not rt2.stats.steps_exhausted
 
 
 # ---------------------------------------------------------------------------
