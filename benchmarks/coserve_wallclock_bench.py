@@ -69,6 +69,12 @@ def main() -> None:
                     help="scrape the metrics registry mid-replay and fail "
                          "unless gauges are live, counters monotone, and "
                          "the final surface matches ServiceMetrics")
+    ap.add_argument("--inject-faults", action="store_true",
+                    help="seeded fault injection during the replay "
+                         "(DESIGN.md §16): request-scoped dispatch faults "
+                         "plus allocator/host-pool degradation faults; "
+                         "asserts the engine survives and recovers")
+    ap.add_argument("--fault-seed", type=int, default=0)
     args = ap.parse_args()
 
     import threading
@@ -76,6 +82,7 @@ def main() -> None:
     import jax
 
     from repro.configs import get_config
+    from repro.core.faults import FaultInjector, RuntimeHealth
     from repro.core.profiler import BatchShape, CalibrationGrid
     from repro.core.scheduler import SchedulerConfig
     from repro.core.slo import SLO
@@ -115,6 +122,23 @@ def main() -> None:
         if args.tp > 1 or tf.supports_paged(cfg)
         else None
     )
+    # --inject-faults: a seeded schedule of request-scoped dispatch faults
+    # plus block-manager degradation faults, all landing inside the first
+    # ~120 engine iterations (the ON/OFF drain).  Faults are injected into
+    # the engine; the assertions below check the runtime absorbed them
+    # (DESIGN.md §16).
+    faults = None
+    if args.inject_faults:
+        faults = FaultInjector.seeded(
+            args.fault_seed,
+            {
+                "dispatch": {"n": 2, "window": 24, "scope": "request"},
+                "alloc.grow": {"n": 2, "window": 40},
+                "host.checkpoint": {"n": 2, "window": 20},
+                "host.swap_out": {"n": 1, "window": 8},
+            },
+        )
+
     eng = RealEngine(
         cfg,
         params,
@@ -125,7 +149,7 @@ def main() -> None:
         # (fused_batch=False) exposing >=1 prefill-group boundary too
         eng_cfg=RealEngineConfig(
             max_model_len=128, num_device_blocks=256, block_size=16,
-            max_prefill_batch=4, mesh=mesh,
+            max_prefill_batch=4, mesh=mesh, faults=faults,
         ),
     )
 
@@ -254,6 +278,46 @@ def main() -> None:
         f"prefix_cache_hit_rate={final['prefix_cache_hit_rate']:.3f} "
         f"calibration_drift={final.get('calibration_drift', 0.0):.2f}"
     )
+
+    if faults is not None:
+        print(
+            "faults "
+            f"injected={faults.injected} pending={faults.pending} "
+            f"requests_failed={rt.stats.requests_failed} "
+            f"degraded_transitions={rt.stats.degraded_transitions} "
+            f"health={rt.health.name}"
+        )
+        # the engine core survived every injected fault (DESIGN.md §16)
+        assert rt.health != RuntimeHealth.FAILED, (
+            f"engine went FAILED under injection: {rt.health}"
+        )
+        assert faults.injected >= 1, "no scheduled fault fired"
+        # >=1 request-scoped recovery: the dispatch faults land inside the
+        # first 24 iterations, well within the replay drain
+        assert rt.stats.requests_failed >= 1, (
+            "no request-scoped fault recovered "
+            f"(fired: {faults.fired})"
+        )
+        assert rt.stats.requests_failed == len(rt.failed)
+        for r in rt.failed:
+            assert r.error is not None, f"failed request {r} lacks its error"
+        # accounting closes: every submitted request finished, failed, or
+        # was rejected at admission — none lost
+        total = len(online) + len(offline)
+        assert (
+            m.num_finished + len(rt.failed) + rt.stats.rejected == total
+        ), (
+            f"requests lost: finished={m.num_finished} "
+            f"failed={len(rt.failed)} rejected={rt.stats.rejected} "
+            f"of {total}"
+        )
+        # pool invariants hold after recovery (no leaked/double-freed blocks)
+        eng.blocks.check_invariants()
+        # the metrics surface reflects the faults
+        assert final["faults_injected_total"] == faults.injected
+        assert final["requests_failed_total"] == rt.stats.requests_failed
+        assert final["engine_health"] < RuntimeHealth.FAILED
+        print("inject-faults OK")
 
     if args.assert_metrics:
         # liveness: at least one mid-replay scrape saw the engine running

@@ -24,7 +24,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
-from repro.kvcache.block_manager import BlockManager
+from repro.kvcache.block_manager import BlockManager, OutOfBlocks
 
 from .request import Request
 
@@ -81,6 +81,10 @@ class CheckpointStats:
     # because a shared full block is immutable — any divergent writer is
     # rerouted to a private copy by the COW barrier before its write lands
     shared_block_checkpoints: int = 0
+    # rounds cut short by host-pool exhaustion past the free-count pre-cap
+    # (injected host.checkpoint faults): checkpointing is best-effort, so
+    # the rest of the round is simply deferred (DESIGN.md §16)
+    host_pool_skips: int = 0
 
 
 class Checkpointer:
@@ -138,7 +142,13 @@ class Checkpointer:
         n = min(n, io_budget_blocks, self.blocks.free_host_blocks)
         out = []
         for seq_id, idx in pending[:n]:
-            dev, host = self.blocks.assign_checkpoint(seq_id, idx)
+            try:
+                dev, host = self.blocks.assign_checkpoint(seq_id, idx)
+            except OutOfBlocks:
+                # host pool exhausted past the pre-cap: checkpointing is
+                # best-effort — defer the rest of this round, never raise
+                self.stats.host_pool_skips += 1
+                break
             if self.blocks.block_refcount(dev) > 1:
                 # Sharing rule (DESIGN.md §14): checkpointing a shared block
                 # is sound — shared full blocks are immutable under COW — and

@@ -20,6 +20,7 @@ class Phase(enum.Enum):
     DECODE = "decode"  # autoregressive generation
     PREEMPTED = "preempted"  # evicted from device (host ckpt and/or recompute)
     FINISHED = "finished"
+    FAILED = "failed"  # request-scoped fault; terminal like FINISHED
 
 
 _ids = itertools.count()
@@ -57,6 +58,11 @@ class Request:
     first_token_time: Optional[float] = None  # TTFT = this - arrival_time
     token_times: List[float] = field(default_factory=list)
     finish_time: Optional[float] = None
+
+    # ---- failure domain (DESIGN.md §16) ------------------------------------
+    # set when phase == FAILED: the typed RequestFailed that killed this
+    # request; surfaced via StreamHandle.result() / the TokenChannel error-EOS
+    error: Optional[BaseException] = None
 
     # ------------------------------------------------------------------
     @property

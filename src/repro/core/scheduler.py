@@ -92,6 +92,9 @@ class SchedulerSnapshot:
     # (request, phase, num_prefilled, num_preemptions, host_recoverable,
     #  first_scheduled_time, prefix_cached) — the plan-mutable Request fields
     req_state: List[tuple]
+    # degradation counters (rolled back with the plan so speculative
+    # planning never inflates them — DESIGN.md §16)
+    degraded: dict = field(default_factory=dict)
 
 
 @dataclass
@@ -149,6 +152,16 @@ class UnifiedScheduler:
         self.events: List[Tuple[str, Request, list]] = []
         # gate for background swap-in admission (None = always allow)
         self.io_gate: Optional[Callable[[], bool]] = None
+        # graceful-degradation counters (DESIGN.md §16): pool-pressure
+        # events absorbed without raising into the engine loop.  Published
+        # as degraded_*_total metrics by the wall-clock runtime; captured
+        # in snapshots so speculative rollbacks don't inflate them.
+        self.degraded: Dict[str, int] = {
+            "resume_deferred": 0,  # OutOfBlocks on resume -> stay preempted
+            "swap_fallback": 0,  # host pool full on swap-out -> discard
+            "alloc_retry": 0,  # grow failed past pre-check -> victim hunt
+            "cow_retry": 0,  # COW copies failed -> victim hunt
+        }
 
     # ------------------------------------------------------------ submission
     def check_admission(self, req: Request) -> None:
@@ -218,15 +231,22 @@ class UnifiedScheduler:
             planned_ids = {r.request_id for r in plan.decode_reqs} | {
                 c.request.request_id for c in plan.prefill_chunks
             }
-        while not self.blocks.can_allocate(req.request_id, new_total):
+        while True:
+            if self.blocks.can_allocate(req.request_id, new_total):
+                try:
+                    self.blocks.grow(req.request_id, new_total)
+                    return True
+                except OutOfBlocks:
+                    # exhaustion past the pre-check (injected alloc.grow
+                    # fault): degrade into the same victim hunt as genuine
+                    # pressure instead of raising into the engine loop
+                    self.degraded["alloc_retry"] += 1
             victim = self._pick_memory_victim(exclude=req, planned=planned_ids)
             if victim is None:
                 return False
             self._preempt_offline(victim)
             if plan is not None:
                 plan.preempted.append(victim)
-        self.blocks.grow(req.request_id, new_total)
-        return True
 
     def _cow_for_write(
         self,
@@ -252,6 +272,7 @@ class UnifiedScheduler:
             try:
                 pairs = self.blocks.prepare_write(req.request_id, lo, hi)
             except OutOfBlocks:
+                self.degraded["cow_retry"] += 1
                 victim = self._pick_memory_victim(
                     exclude=req, planned=planned_ids
                 )
@@ -306,7 +327,8 @@ class UnifiedScheduler:
                 self.events.append(("preempt_swap", req, copies))
                 swapped = True
             except OutOfBlocks:
-                pass  # host pool full: fall back to discard (vLLM behaviour)
+                # host pool full: fall back to discard (vLLM behaviour)
+                self.degraded["swap_fallback"] += 1
         if not swapped:
             _, freed = self.blocks.preempt_discard(req.request_id)
             recoverable = self.blocks.tokens_recoverable_from_host(req.request_id)
@@ -564,7 +586,15 @@ class UnifiedScheduler:
                 # host link saturated: defer swap-in to a later round
                 still.append(r)
                 continue
-            copies = self.blocks.resume(r.request_id)
+            try:
+                copies = self.blocks.resume(r.request_id)
+            except OutOfBlocks:
+                # exhaustion past can_resume (injected alloc.resume fault):
+                # the request simply stays preempted for a later round —
+                # never raise into the engine loop (DESIGN.md §16)
+                self.degraded["resume_deferred"] += 1
+                still.append(r)
+                continue
             self.events.append(("resume", r, copies))
             # tokens recoverable from host come back via (background) swap-in;
             # the rest is recompute -> prefill chunks
@@ -627,6 +657,7 @@ class UnifiedScheduler:
                 )
                 for r in reqs
             ],
+            degraded=dict(self.degraded),
         )
 
     def restore(self, snap: "SchedulerSnapshot") -> None:
@@ -645,6 +676,7 @@ class UnifiedScheduler:
         self.t_sched = snap.t_sched
         self.current_plan = snap.current_plan
         self.blocks.restore(snap.blocks)
+        self.degraded = dict(snap.degraded)
         for r, phase, npref, npre, hrec, fst, pcache in snap.req_state:
             r.phase = phase
             r.num_prefilled = npref

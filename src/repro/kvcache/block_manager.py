@@ -112,6 +112,16 @@ class BlockManager:
         self.prefix_hits = 0
         self.prefix_tokens_saved = 0
         self.cow_copies = 0
+        # Optional core.faults.FaultInjector (DESIGN.md §16).  Each pool
+        # mutation with an OutOfBlocks contract arms a named point *before*
+        # mutating, so an injected exhaustion is indistinguishable from the
+        # real thing (atomicity preserved) and must be absorbed by the same
+        # caller-side degradation path.
+        self.faults = None
+
+    def _maybe_fault(self, point: str, detail: str) -> None:
+        if self.faults is not None and self.faults.fires(point):
+            raise OutOfBlocks(f"injected fault [{point}]: {detail}")
 
     # ------------------------------------------------------------------ info
     @property
@@ -243,6 +253,8 @@ class BlockManager:
         if new_total_tokens <= sb.num_tokens:
             return []  # capacity already covers (e.g. recompute after resume)
         need = self.blocks_for_tokens(new_total_tokens) - len(sb.device_blocks)
+        if need > 0:
+            self._maybe_fault("alloc.grow", f"grow seq {seq_id} by {need}")
         if need > self.free_device_blocks:
             raise OutOfBlocks(
                 f"need {need} device blocks, have {self.free_device_blocks}"
@@ -281,6 +293,7 @@ class BlockManager:
         ]
         if not shared:
             return []
+        self._maybe_fault("cow.prepare", f"COW for seq {seq_id}")
         if len(shared) > self.free_device_blocks:
             raise OutOfBlocks(
                 f"COW needs {len(shared)} device blocks, have "
@@ -347,6 +360,7 @@ class BlockManager:
         sb = self._seqs[seq_id]
         if sb.host_blocks[block_index] >= 0:
             raise ValueError("block already checkpointed")
+        self._maybe_fault("host.checkpoint", f"checkpoint seq {seq_id}")
         if not self._free_host:
             raise OutOfBlocks("host pool exhausted")
         hb = self._free_host.pop()
@@ -418,6 +432,7 @@ class BlockManager:
         cannot take the un-checkpointed blocks — callers fall back to
         discard, as vLLM does."""
         sb = self._seqs[seq_id]
+        self._maybe_fault("host.swap_out", f"swap out seq {seq_id}")
         need = sum(1 for h in sb.host_blocks if h < 0)
         if need > len(self._free_host):
             raise OutOfBlocks("host pool exhausted during swap-out")
@@ -448,6 +463,7 @@ class BlockManager:
         sb = self._seqs[seq_id]
         if sb.on_device:
             raise ValueError(f"seq {seq_id} already resident")
+        self._maybe_fault("alloc.resume", f"resume seq {seq_id}")
         kept_tokens = len(sb.host_blocks) * self.block_size
         kept_tokens = min(kept_tokens, sb.num_tokens)
         need = self.blocks_for_tokens(sb.num_tokens)
@@ -538,6 +554,18 @@ class BlockManager:
         self._key_of_block = {b: k for k, b in self._index.items()}
         self._cached_free = OrderedDict((b, None) for b in cached)
         self.prefix_hits, self.prefix_tokens_saved, self.cow_copies = counters
+
+    def drop_host_block(self, seq_id: int, block_index: int) -> None:
+        """Release one host checkpoint slot of a sequence (fault recovery:
+        a scheduler rollback can resurrect host-table entries whose bytes
+        the engine's ``HostKVStore`` already consumed — the runtime
+        reconciles by dropping such entries so resume never counts tokens
+        it cannot actually restore)."""
+        sb = self._seqs[seq_id]
+        h = sb.host_blocks[block_index]
+        if h >= 0:
+            self._free_host.append(h)
+            sb.host_blocks[block_index] = -1
 
     # ------------------------------------------------------------------ free
     def free_seq(self, seq_id: int) -> None:

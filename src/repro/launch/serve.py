@@ -113,18 +113,31 @@ def run_real(args) -> None:
           f"ckpt_blocks={eng.ckpt.stats.blocks_checkpointed}")
 
 
-def _metrics_server(registry, port: int):
+def _metrics_server(registry, port: int, health_cb=None):
     """Serve ``MetricsRegistry.render_text`` over HTTP (stdlib only) from a
     daemon thread — the ``--metrics-port`` text endpoint (DESIGN.md §15).
     Snapshots never block the engine thread, so scraping under load is
-    safe by construction."""
+    safe by construction.
+
+    With ``health_cb`` (``CoServingRuntime.check_health``), ``GET /health``
+    reports the runtime's health state machine (DESIGN.md §16): 200 for
+    HEALTHY/DEGRADED (degraded still serves), 503 for FAILED — the shape a
+    load balancer's probe wants.  Every other path serves the metrics."""
     import http.server
     import threading
 
     class Handler(http.server.BaseHTTPRequestHandler):
         def do_GET(self):  # noqa: N802 (stdlib API name)
-            body = registry.render_text().encode()
-            self.send_response(200)
+            if self.path.rstrip("/") == "/health" and health_cb is not None:
+                health, age = health_cb()
+                body = (
+                    f"health {health.name}\nheartbeat_age_seconds {age:.3f}\n"
+                ).encode()
+                code = 503 if health.name == "FAILED" else 200
+            else:
+                body = registry.render_text().encode()
+                code = 200
+            self.send_response(code)
             self.send_header("Content-Type", "text/plain; version=0.0.4")
             self.send_header("Content-Length", str(len(body)))
             self.end_headers()
@@ -192,10 +205,12 @@ def run_wallclock(args) -> None:
         ),
     )
     fe = Frontend(rt, clock=rt.now)
-    srv = _metrics_server(rt.registry, args.metrics_port) \
+    srv = _metrics_server(rt.registry, args.metrics_port,
+                          health_cb=rt.check_health) \
         if args.metrics_port else None
     if srv is not None:
-        print(f"metrics endpoint: http://127.0.0.1:{args.metrics_port}/")
+        print(f"metrics endpoint: http://127.0.0.1:{args.metrics_port}/ "
+              f"(health: http://127.0.0.1:{args.metrics_port}/health)")
     rng = np.random.default_rng(args.seed)
     arrivals = loadgen.gamma_arrivals(args.rate, args.cv, args.duration, rng)
     # per-token streaming consumers: one thread per stream iterates its

@@ -57,6 +57,12 @@ class QueueTimeout(BackpressureError):
     deadline.  Maps to HTTP 503 Service Unavailable + Retry-After."""
 
 
+class EngineStalled(BackpressureError):
+    """Watchdog rejection: the engine thread is alive but its heartbeat is
+    older than the watchdog timeout while work is pending (DESIGN.md §16).
+    Maps to HTTP 503 Service Unavailable — the stall may clear."""
+
+
 class TokenChannel:
     """Per-request token event channel: engine thread pushes, API thread
     consumes (DESIGN.md §15).
@@ -69,6 +75,13 @@ class TokenChannel:
     whole point versus the old poll-then-check-finished idiom.  The buffer
     is bounded by the request's ``max_new_tokens`` (the producer never
     pushes more), so no flow control is needed on this edge.
+
+    Error-EOS (DESIGN.md §16): ``close(error=...)`` is the failure-domain
+    sentinel — still sticky, still ordered after every push, and it wakes
+    every blocked consumer.  Iteration drains any tokens delivered before
+    the fault (losslessly), then raises ``error`` instead of returning;
+    ``get`` keeps its value contract (the error is surfaced via ``error``/
+    iteration/``StreamHandle.result``, not by poisoning ``get``).
     """
 
     def __init__(self):
@@ -76,6 +89,7 @@ class TokenChannel:
         self._buf: List[int] = []
         self._read = 0
         self._closed = False
+        self.error: Optional[BaseException] = None  # set by close(error=...)
         # non-empty push batches — a per-token producer makes this approach
         # the token count; a per-request producer would leave it at 1
         self.pushes = 0
@@ -90,8 +104,10 @@ class TokenChannel:
             self.pushes += 1
             self._cond.notify_all()
 
-    def close(self) -> None:
+    def close(self, error: Optional[BaseException] = None) -> None:
         with self._cond:
+            if not self._closed and error is not None:
+                self.error = error
             self._closed = True
             self._cond.notify_all()
 
@@ -123,6 +139,8 @@ class TokenChannel:
                     tok = self._buf[self._read]
                     self._read += 1
                 else:  # closed and drained
+                    if self.error is not None:
+                        raise self.error
                     return
             yield tok
 
@@ -165,7 +183,7 @@ class StreamHandle:
 
     @property
     def finished(self) -> bool:
-        return self.request.phase == Phase.FINISHED
+        return self.request.phase in (Phase.FINISHED, Phase.FAILED)
 
     def __iter__(self) -> Iterator[int]:
         if self.channel is not None:
@@ -197,10 +215,14 @@ class StreamHandle:
                 )
                 if self.channel.get(timeout=t) is None and not self.channel.closed:
                     raise TimeoutError("stream still open after timeout")
+            if self.channel.error is not None:
+                raise self.channel.error
         elif not self.finished:
             raise RuntimeError(
                 "stream not finished; drive the engine or use poll()"
             )
+        elif self.request.error is not None:  # poll mode, FAILED request
+            raise self.request.error
         return list(self.request.output_tokens)
 
 

@@ -97,6 +97,7 @@ from repro.core.profiler import (
     calibrate,
 )
 from repro.core.request import Request
+from repro.core.faults import InjectedFault, RequestFailed
 from repro.core.scheduler import SchedulerConfig, UnifiedScheduler
 from repro.core.slo import SLO
 from repro.kvcache import cache_ops
@@ -152,6 +153,11 @@ class RealEngineConfig:
     # tokens are bitwise identical either way — the differential harness
     # runs both settings.  Ignored on the contiguous fallback.
     prefix_cache: bool = True
+    # Deterministic fault injection (core.faults.FaultInjector, DESIGN.md
+    # §16): armed at named points in the engine/block-manager hot paths.
+    # None (the default) keeps the fault-free path untouched — no extra
+    # snapshots, no traced programs, no overhead.
+    faults: Optional[Any] = None
 
 
 class _PendingFetch:
@@ -226,6 +232,16 @@ class RealEngine:
             eng_cfg.num_device_blocks, eng_cfg.num_host_blocks, eng_cfg.block_size,
             prefix_cache=eng_cfg.prefix_cache and self.paged,
         )
+        # Fault injection (DESIGN.md §16): the manager arms the pool points
+        # (alloc.grow/alloc.resume/cow.prepare/host.*); the engine arms the
+        # dispatch points pre-execution.  _step_snap is the pre-iteration
+        # scheduler snapshot the runtime rolls back to on a request-scoped
+        # fault — taken only when an injector is installed, so the
+        # fault-free path pays nothing.
+        self.faults = eng_cfg.faults
+        self.blocks.faults = self.faults
+        self._step_snap = None
+        self._step_snap_staged = False
         sched_cfg = sched_cfg or SchedulerConfig(
             chunk_size=32, slo_aware=False, offline_batch_tokens=4096
         )
@@ -858,6 +874,91 @@ class RealEngine:
                     self.caches[rid] = cache
         self.sched.events.clear()
 
+    # --------------------------------------------------- fault injection (§16)
+    def _arm_iteration_faults(self, plan) -> None:
+        """Arm the per-iteration dispatch fault points — once per *executed*
+        iteration, after planning/event processing but BEFORE any of this
+        iteration's device work.  The pre-dispatch cut is what makes the
+        rollback exact for every arch (SSM state included): when a fault
+        fires here, nothing of the iteration has run, so restoring the
+        pre-iteration scheduler snapshot recovers the precise pre-fault
+        state and surviving requests stay bitwise identical."""
+        if self.faults is None:
+            return
+        spec = self.faults.arm("dispatch.slow")
+        if spec is not None and spec.delay_s > 0:
+            self.faults.sleep(spec.delay_s)
+        spec = self.faults.arm("dispatch")
+        if spec is None:
+            return
+        if spec.scope == "request":
+            rid = spec.request_id
+            if rid is None:
+                # default victim: first offline request in the plan (the
+                # harvested class absorbs the blast), else first planned
+                reqs = [c.request for c in plan.prefill_chunks] + list(
+                    plan.decode_reqs
+                )
+                offline = [r for r in reqs if not r.is_online]
+                pick = (offline or reqs)[0] if (offline or reqs) else None
+                rid = None if pick is None else pick.request_id
+            if rid is not None:
+                raise RequestFailed(
+                    rid, f"injected dispatch fault at step {self.steps}"
+                )
+            return  # empty plan slot: nothing to attribute the fault to
+        raise InjectedFault(
+            f"injected engine-fatal dispatch fault at step {self.steps}"
+        )
+
+    def recover_from_fault(self) -> None:
+        """Roll the engine back to the pre-iteration cut after an exception
+        escaped ``step()`` (the runtime's request-scoped recovery path,
+        DESIGN.md §16).
+
+        Restores the scheduler/block-manager snapshot taken before the
+        failed iteration planned (nothing of that iteration dispatched —
+        faults fire pre-execution), discards staged speculation, drains the
+        pipeline's async artifacts, and reconciles the host KV store: a
+        rollback can resurrect manager host-table entries whose bytes a
+        processed COW event already popped, which would make a later resume
+        count tokens it cannot restore — such entries are dropped."""
+        if self._staged is not None:  # defensive: faults fire mid-step,
+            self.sched.restore(self._staged.snap)  # after _staged was popped
+            self._staged = None
+            self.pipeline_discards += 1
+        snap, self._step_snap = self._step_snap, None
+        was_staged, self._step_snap_staged = self._step_snap_staged, False
+        if snap is not None:
+            self.sched.restore(snap)
+            if was_staged:
+                self.pipeline_discards += 1
+        self.flag.clear()
+        if self.pipeline:
+            self.flush_pipeline()
+        for sid in self.blocks.seq_ids():
+            sb = self.blocks.seq(sid)
+            for i, hb in enumerate(sb.host_blocks):
+                if hb >= 0 and self.host.get(sid, i) is None:
+                    self.blocks.drop_host_block(sid, i)
+
+    def fail_request(self, req: Request) -> None:
+        """Remove one request from every engine-side structure (the runtime
+        already rolled the iteration back via ``recover_from_fault``): the
+        scheduler's queues, its pool blocks, host-store bytes, checkpoint
+        candidacy, and the contiguous-fallback cache."""
+        sched = self.sched
+        for q in (sched.online_q, sched.offline_q, sched.running, sched.preempted):
+            if req in q:
+                q.remove(req)
+        self.ckpt.unmark(req)
+        if self.blocks.has_seq(req.request_id):
+            self.blocks.free_seq(req.request_id)
+        self.host.drop_seq(req.request_id)
+        if not self.paged:
+            self.caches.pop(req.request_id, None)
+        self._plan_gen += 1  # staged speculation may reference the request
+
     # ------------------------------------------------------------------ step
     def step(self) -> bool:
         """One engine iteration. Returns False when no work remains."""
@@ -865,15 +966,21 @@ class RealEngine:
             return self._step_pipelined()
         now = self._clock()
         sched = self.sched
+        if self.faults is not None:
+            # pre-iteration cut for request-scoped fault rollback (§16)
+            self._step_snap = sched.snapshot()
+            self._step_snap_staged = False
         plan = sched.plan_iteration(now)
         self._process_events()
         if plan.empty:
+            self._step_snap = None
             return bool(
                 sched.online_q or sched.offline_q or sched.running or sched.preempted
             )
         self.steps += 1
         t_iter0 = time.perf_counter()
         predicted_s = self.sched.model.iter_time(plan.shape)
+        self._arm_iteration_faults(plan)
 
         aborted = False
         tokens: Dict[int, int] = {}
@@ -913,6 +1020,9 @@ class RealEngine:
                         tokens[r.request_id] = int(toks[i])
 
         sched.commit(plan, self._clock(), aborted=aborted, tokens=tokens)
+        # the iteration is committed: token progress is now commit-owned
+        # state the snapshot does not capture, so the rollback cut is gone
+        self._step_snap = None
         self.measured_iter_seconds += time.perf_counter() - t_iter0
         self.predicted_iter_seconds += predicted_s
         self.measured_iters += 1
@@ -1286,9 +1396,14 @@ class RealEngine:
                 # time (exactly the serial engine's gap), not device compute
                 self._t_last_enqueue = time.perf_counter()
                 self._last_out = None
+            if self.faults is not None:
+                # pre-iteration cut for request-scoped fault rollback (§16)
+                self._step_snap = sched.snapshot()
+                self._step_snap_staged = False
             plan = sched.plan_iteration(now)
             self._process_events()
             if plan.empty:
+                self._step_snap = None
                 self.flush_pipeline()
                 self._t_last_enqueue = None
                 self._last_out = None
@@ -1299,6 +1414,11 @@ class RealEngine:
             samplers, inputs = self._build_fused(plan)
         else:
             plan, samplers, inputs = staged.plan, staged.samplers, staged.inputs
+            if self.faults is not None:
+                # the speculation's own snapshot predates every mutation
+                # the staged plan made — it IS the rollback cut
+                self._step_snap = staged.snap
+                self._step_snap_staged = True
             # Algorithm 2's in-flight estimate measures from dispatch time,
             # not staging time
             sched.t_sched = now
@@ -1306,6 +1426,7 @@ class RealEngine:
         self.steps += 1
         t_iter0 = time.perf_counter()
         predicted_s = self.sched.model.iter_time(plan.shape)
+        self._arm_iteration_faults(plan)
 
         preemptible = (
             plan.pure_offline
@@ -1317,6 +1438,7 @@ class RealEngine:
         logits, aborted = self._dispatch_fused(*inputs, preemptible=preemptible)
         if aborted:
             sched.commit(plan, self._clock(), aborted=True, tokens={})
+            self._step_snap = None
             self.measured_iter_seconds += time.perf_counter() - t_iter0
             self.predicted_iter_seconds += predicted_s
             self.measured_iters += 1
@@ -1342,6 +1464,7 @@ class RealEngine:
         # tokens without values (record_token(None)), the pending fetch
         # backfills output_tokens before anything on host reads them
         sched.commit(plan, self._clock(), aborted=False, tokens=None)
+        self._step_snap = None
         self.measured_iter_seconds += time.perf_counter() - t_iter0
         self.predicted_iter_seconds += predicted_s
         self.measured_iters += 1

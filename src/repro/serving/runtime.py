@@ -74,14 +74,21 @@ from __future__ import annotations
 
 import threading
 import time
+import traceback
 import warnings
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+from repro.core.faults import (
+    EngineDead,
+    RequestFailed,
+    RuntimeHealth,
+    RuntimeNotRunning,
+)
 from repro.core.request import Phase, Request
 from repro.core.scheduler import AdmissionError
 from repro.core.slo import ServiceMetrics, SLOTracker, summarize
-from repro.serving.api import QueueFull, QueueTimeout, TokenChannel
+from repro.serving.api import EngineStalled, QueueFull, QueueTimeout, TokenChannel
 from repro.serving.metrics import MetricsRegistry
 
 
@@ -124,6 +131,12 @@ class ServingConfig:
     policy: str = "queue-with-timeout"  # or "reject-fast"
     queue_timeout_s: float = 2.0  # 503 deadline (queue-with-timeout)
     backpressure_poll_s: float = 0.002  # capacity re-check cadence
+    # ---- health / watchdog (DESIGN.md §16) --------------------------------
+    # admission rejects with EngineStalled (503) when the engine-thread
+    # heartbeat is older than this while work is pending
+    watchdog_timeout_s: float = 10.0
+    # consecutive fault-free iterations before DEGRADED heals to HEALTHY
+    health_recovery_iters: int = 20
 
     def __post_init__(self):
         if self.policy not in ("queue-with-timeout", "reject-fast"):
@@ -140,6 +153,9 @@ class RuntimeStats:
     preemption_latencies: List[float] = field(default_factory=list)
     # replay() hit max_steps with work remaining — metrics are partial
     steps_exhausted: bool = False
+    # failure domains (DESIGN.md §16)
+    requests_failed: int = 0  # request-scoped faults absorbed
+    degraded_transitions: int = 0  # HEALTHY -> DEGRADED edges
 
 
 class CoServingRuntime:
@@ -157,8 +173,13 @@ class CoServingRuntime:
         idle_backoff_s: float = 0.0005,
         serving: Optional[ServingConfig] = None,
         registry: Optional[MetricsRegistry] = None,
+        manual: bool = False,
     ):
         self.engine = engine
+        # manual=True: the caller drives engine.step() itself (tests,
+        # single-threaded harnesses) — submissions are accepted without a
+        # running engine thread instead of raising RuntimeNotRunning
+        self.manual = manual
         self._clock = clock or time.perf_counter
         self._sleep = sleep or (
             clock.sleep if isinstance(clock, ManualClock) else time.sleep
@@ -186,6 +207,14 @@ class CoServingRuntime:
         self._streams: Dict[int, list] = {}
         self._slo_tracker = SLOTracker(engine.sched.slo)
         self._prompt_tokens_delivered = 0
+        # ---- failure domains / health (DESIGN.md §16) -------------------
+        self._health = RuntimeHealth.HEALTHY
+        self._fatal: Optional[EngineDead] = None  # sticky engine-fatal error
+        self._heartbeat = self._clock()  # engine-thread liveness timestamp
+        self._degraded_seen = 0  # high-water mark of absorbed degradations
+        self._clean_steps = 0  # fault-free iterations since last degradation
+        self._replay_active = False
+        self.failed: List[Request] = []  # request-scoped casualties
         engine.set_clock(self.now)
         engine.arrival_poll = self._drain_arrivals
 
@@ -200,6 +229,95 @@ class CoServingRuntime:
         """Seconds since the runtime was created (or since ``replay`` began)."""
         return self._clock() - self._t0
 
+    # ----------------------------------------------- health / watchdog (§16)
+    @property
+    def health(self) -> RuntimeHealth:
+        return self._health
+
+    def check_health(self) -> Tuple[RuntimeHealth, float]:
+        """(health, heartbeat age in seconds) — the ``/health`` endpoint
+        surface.  Safe from any thread; also detects an engine thread that
+        died without reporting (the belt-and-braces case — a raised
+        exception is always classified by ``_step_once`` first)."""
+        if (
+            self._fatal is None
+            and self._thread is not None
+            and not self._thread.is_alive()
+            and not self._stop.is_set()
+        ):
+            self._note_thread_death()
+        return self._health, max(0.0, self._clock() - self._heartbeat)
+
+    def _set_health(self, h: RuntimeHealth) -> None:
+        """Engine-thread health transitions.  FAILED is terminal; the
+        HEALTHY -> DEGRADED edge is counted (``degraded_transitions``)."""
+        if self._health == RuntimeHealth.FAILED or h == self._health:
+            return
+        if h == RuntimeHealth.DEGRADED:
+            self.stats.degraded_transitions += 1
+            self._clean_steps = 0
+        self._health = h
+
+    def _note_degradation(self) -> None:
+        """Fold absorbed degradations (scheduler pool-pressure fallbacks,
+        checkpoint skips, failed requests) into the health state: any new
+        one flips DEGRADED; ``health_recovery_iters`` consecutive clean
+        iterations heal back to HEALTHY."""
+        total = self.stats.requests_failed
+        total += sum(getattr(self.engine.sched, "degraded", {}).values())
+        ckpt = getattr(self.engine, "ckpt", None)
+        if ckpt is not None:
+            total += ckpt.stats.host_pool_skips
+        if total > self._degraded_seen:
+            self._degraded_seen = total
+            self._set_health(RuntimeHealth.DEGRADED)
+        elif self._health == RuntimeHealth.DEGRADED:
+            self._clean_steps += 1
+            if self._clean_steps >= self.serving.health_recovery_iters:
+                self._set_health(RuntimeHealth.HEALTHY)
+
+    def _note_thread_death(self) -> None:
+        """The engine thread is gone without a classified exception (e.g.
+        killed externally): synthesize the engine-fatal state so streams
+        wake and submissions fail fast instead of queueing forever."""
+        err = EngineDead("engine thread died without reporting an error")
+        self._fatal = err
+        self._health = RuntimeHealth.FAILED
+        self._close_all_streams(error=err)
+
+    def _check_accepting(self) -> None:
+        """Fail-fast gate for submissions (after the pure admission check,
+        so oversized requests keep raising ``AdmissionError`` first).
+
+        Raises ``EngineDead`` when the engine is dead, ``RuntimeNotRunning``
+        when the threaded runtime was never started (or is stopping), and
+        ``EngineStalled`` (503) when the watchdog sees a stale heartbeat
+        with work pending.  ``manual=True`` runtimes and replay mode skip
+        the thread checks — their caller drives the engine directly.
+        DEGRADED does NOT reject: graceful degradation keeps serving."""
+        if self._fatal is not None:
+            raise self._fatal
+        if self.manual or self._replay_active:
+            return
+        if self._thread is None:
+            raise RuntimeNotRunning(
+                "runtime not started: call start() first (or construct "
+                "with manual=True to drive engine.step() yourself)"
+            )
+        if not self._thread.is_alive():
+            self._note_thread_death()
+            raise self._fatal
+        if self._stop.is_set():
+            raise RuntimeNotRunning("runtime is stopping")
+        with self._lock:
+            busy = bool(self._pending) or any(self._sched_depths)
+        age = self._clock() - self._heartbeat
+        if busy and age > self.serving.watchdog_timeout_s:
+            raise EngineStalled(
+                f"engine heartbeat is {age:.3f}s old with work pending "
+                f"(watchdog_timeout_s={self.serving.watchdog_timeout_s})"
+            )
+
     # -------------------------------------------------------------- ingress
     def submit(self, req: Request) -> None:
         """Thread-safe submission (either priority class) with bounded
@@ -213,6 +331,7 @@ class CoServingRuntime:
         (queue-with-timeout); both leave zero state behind.
         """
         self.engine.sched.check_admission(req)
+        self._check_accepting()
         self._admit_bounded([req])
 
     def submit_all(self, reqs: Sequence[Request]) -> None:
@@ -222,6 +341,7 @@ class CoServingRuntime:
         (``Frontend.submit_batch`` binds to this)."""
         for r in reqs:
             self.engine.sched.check_admission(r)
+        self._check_accepting()
         self._admit_bounded(list(reqs))
 
     def on_online_arrival(self, req: Request) -> None:
@@ -336,14 +456,17 @@ class CoServingRuntime:
                 for rid in done_ids:
                     self._streams.pop(rid, None)
 
-    def _close_all_streams(self) -> None:
+    def _close_all_streams(self, error: Optional[BaseException] = None) -> None:
         """Shutdown backstop: close every remaining channel (even for
-        unfinished requests) so blocked consumers always wake up."""
+        unfinished requests) so blocked consumers always wake up.  With
+        ``error`` (engine-fatal shutdown), each channel carries the error
+        sentinel — consumers drain their delivered prefix, then see the
+        typed failure instead of a silent early end-of-stream."""
         with self._lock:
             entries = list(self._streams.values())
             self._streams.clear()
         for _req, ch, _fed in entries:
-            ch.close()
+            ch.close(error=error)
 
     # ---------------------------------------------------------------- drain
     def _drain_arrivals(self) -> None:
@@ -496,14 +619,53 @@ class CoServingRuntime:
         reg.counter("pipeline_discards_total").set_to(
             getattr(eng, "pipeline_discards", 0)
         )
+        # failure domains / health / fault injection (§16)
+        reg.gauge("engine_health").set(int(self._health))
+        reg.gauge("engine_heartbeat_age_seconds").set(
+            max(0.0, self._clock() - self._heartbeat)
+        )
+        reg.counter("requests_failed_total").set_to(self.stats.requests_failed)
+        reg.counter("degraded_transitions_total").set_to(
+            self.stats.degraded_transitions
+        )
+        for k, v in getattr(sched, "degraded", {}).items():
+            reg.counter(f"degraded_{k}_total").set_to(v)
+        ckpt = getattr(eng, "ckpt", None)
+        if ckpt is not None:
+            reg.counter("degraded_ckpt_skipped_total").set_to(
+                ckpt.stats.host_pool_skips
+            )
+        faults = getattr(eng, "faults", None)
+        if faults is not None:
+            reg.counter("faults_injected_total").set_to(faults.injected)
 
     # ----------------------------------------------------------------- loop
     def _step_once(self) -> bool:
-        """One engine iteration with arrival delivery; returns False when the
-        engine reports no remaining work."""
+        """One engine iteration with arrival delivery; returns False when
+        the engine reports no remaining work OR died.
+
+        This is the failure-domain boundary (DESIGN.md §16): a
+        ``RequestFailed`` escaping the engine fails exactly one request
+        (scheduler rolled back, blocks freed, error-EOS on its stream) and
+        the loop keeps serving; any other exception is engine-fatal — the
+        traceback is captured into a sticky ``EngineDead``, health flips to
+        FAILED, every stream consumer wakes with the error sentinel, and
+        subsequent submissions fail fast."""
+        self._heartbeat = self._clock()
+        try:
+            return self._step_guarded()
+        except RequestFailed as rf:
+            self._recover_request_fault(rf)
+            return True
+        except Exception as exc:
+            self._engine_fatal(exc)
+            return False
+
+    def _step_guarded(self) -> bool:
         self._drain_arrivals()
         before = self.engine.steps
         alive = self.engine.step()
+        self._note_degradation()
         self._observe_aborts()
         self._pump_streams()
         self._publish_metrics()
@@ -512,6 +674,58 @@ class CoServingRuntime:
             # behind a pending resume): back off instead of spinning
             self._sleep(self.idle_backoff_s)
         return alive
+
+    def _recover_request_fault(self, rf: RequestFailed) -> None:
+        """Request-scoped recovery: roll the engine back to the
+        pre-iteration cut (nothing of the failed iteration dispatched —
+        faults fire pre-execution), excise the one failed request from
+        every engine structure, surface the typed error on its stream, and
+        keep serving.  Surviving requests are untouched, so their tokens
+        stay bitwise identical to a fault-free run."""
+        eng = self.engine
+        eng.recover_from_fault()
+        victim = None
+        for r in eng.sched.all_requests():
+            if r.request_id == rf.request_id:
+                victim = r
+                break
+        self.stats.requests_failed += 1
+        if victim is not None and victim.phase != Phase.FINISHED:
+            eng.fail_request(victim)
+            victim.phase = Phase.FAILED
+            victim.error = rf
+            victim.finish_time = self.now()
+            self.failed.append(victim)
+        # flush the victim's pre-fault delivered tokens (lossless prefix),
+        # then error-EOS its channel; other streams just keep flowing
+        self._pump_streams()
+        with self._lock:
+            entry = self._streams.pop(rf.request_id, None)
+        if entry is not None:
+            entry[1].close(error=rf)
+        self._set_health(RuntimeHealth.DEGRADED)
+        self._publish_metrics()
+
+    def _engine_fatal(self, exc: BaseException) -> None:
+        """Engine-fatal path: capture the traceback, flip health to FAILED
+        (terminal), stop the loop, and wake every blocked stream consumer
+        with the sticky ``EngineDead`` sentinel."""
+        err = EngineDead(
+            f"engine loop died: {exc!r}", traceback_text=traceback.format_exc()
+        )
+        err.__cause__ = exc
+        self._fatal = err
+        self._health = RuntimeHealth.FAILED  # bypass _set_health: terminal
+        self._stop.set()
+        try:
+            self._pump_streams()  # best effort: committed values first
+        except Exception:
+            pass
+        self._close_all_streams(error=err)
+        try:
+            self._publish_metrics()
+        except Exception:
+            pass
 
     def replay(
         self,
@@ -531,39 +745,56 @@ class CoServingRuntime:
         made loud: ``stats.steps_exhausted`` is set and a ``RuntimeWarning``
         is emitted (metrics over an unfinished replay understate latency).
         """
+        if self._fatal is not None:
+            raise self._fatal
         self._trace = sorted(trace, key=lambda r: r.arrival_time)
         self._trace_pos = 0
         self._t0 = self._clock()
         self.stats.steps_exhausted = False
-        for _ in range(max_steps):
-            now = self.now()
-            if duration is not None and now >= duration and not drain:
-                break
-            alive = self._step_once()
-            if not alive:
-                with self._lock:
-                    if self._pending:
+        self._replay_active = True
+        try:
+            for _ in range(max_steps):
+                now = self.now()
+                if duration is not None and now >= duration and not drain:
+                    break
+                alive = self._step_once()
+                if self._fatal is not None:
+                    # engine-fatal mid-replay: streams are already closed
+                    # with the sentinel; surface the typed error below
+                    break
+                if not alive:
+                    with self._lock:
+                        if self._pending:
+                            continue
+                    if self._trace_pos < len(self._trace):
+                        # idle until the next trace arrival
+                        gap = self._trace[self._trace_pos].arrival_time - self.now()
+                        if gap > 0:
+                            self._sleep(gap)
                         continue
-                if self._trace_pos < len(self._trace):
-                    # idle until the next trace arrival
-                    gap = self._trace[self._trace_pos].arrival_time - self.now()
-                    if gap > 0:
-                        self._sleep(gap)
-                    continue
-                break
-        else:
-            self.stats.steps_exhausted = True
-            warnings.warn(
-                f"replay exhausted max_steps={max_steps} with work remaining; "
-                "returned metrics cover a partial replay",
-                RuntimeWarning,
-                stacklevel=2,
-            )
-        self._flush_engine()
-        self._pump_streams()
-        self._close_all_streams()
+                    break
+            else:
+                self.stats.steps_exhausted = True
+                warnings.warn(
+                    f"replay exhausted max_steps={max_steps} with work remaining; "
+                    "returned metrics cover a partial replay",
+                    RuntimeWarning,
+                    stacklevel=2,
+                )
+        finally:
+            self._replay_active = False
+        if self._fatal is None:
+            self._flush_engine()
+            self._pump_streams()
+        self._close_all_streams(error=self._fatal)
         self.duration = self.now()
-        self._publish_metrics()
+        try:
+            self._publish_metrics()
+        except Exception:
+            if self._fatal is None:
+                raise
+        if self._fatal is not None:
+            raise self._fatal
         return self.metrics()
 
     # -------------------------------------------------------- threaded mode
@@ -571,10 +802,13 @@ class CoServingRuntime:
         """Run the engine loop on a background thread; submit from any
         thread via ``submit`` / ``on_online_arrival`` (or a ``Frontend``
         bound to this runtime)."""
+        if self._fatal is not None:
+            raise self._fatal  # a dead engine does not restart
         if self._thread is not None:
             raise RuntimeError("runtime already started")
         self._stop.clear()
         self._t0 = self._clock()
+        self._heartbeat = self._clock()
 
         def loop():
             while not self._stop.is_set():
@@ -605,6 +839,10 @@ class CoServingRuntime:
         if drain:
             deadline = self._clock() + timeout
             while self._clock() < deadline:
+                if self._fatal is not None or not self._thread.is_alive():
+                    # dead/dying engine: nothing will ever drain — bail
+                    # immediately instead of burning the full timeout
+                    break
                 with self._lock:
                     busy = bool(self._pending) or any(self._sched_depths)
                 if not busy:
@@ -613,11 +851,16 @@ class CoServingRuntime:
         self._stop.set()
         self._thread.join(timeout=timeout)
         self._thread = None
-        self._flush_engine()
-        self._pump_streams()
-        self._close_all_streams()
+        if self._fatal is None:
+            self._flush_engine()
+            self._pump_streams()
+        self._close_all_streams(error=self._fatal)
         self.duration = self.now()
-        self._publish_metrics()
+        try:
+            self._publish_metrics()
+        except Exception:
+            if self._fatal is None:
+                raise
 
     # -------------------------------------------------------------- metrics
     def metrics(self, duration: Optional[float] = None) -> ServiceMetrics:

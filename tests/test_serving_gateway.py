@@ -247,7 +247,7 @@ def test_queue_with_timeout_honored_under_manual_clock():
     eng = mkengine()
     clock = ManualClock()
     rt = CoServingRuntime(
-        eng, clock=clock,
+        eng, clock=clock, manual=True,
         serving=ServingConfig(
             max_queued_online=1, policy="queue-with-timeout",
             queue_timeout_s=0.5, backpressure_poll_s=0.01,
@@ -270,7 +270,7 @@ def test_queue_with_timeout_honored_under_manual_clock():
 def test_reject_fast_leaves_zero_state():
     eng = mkengine()
     rt = CoServingRuntime(
-        eng, clock=ManualClock(),
+        eng, clock=ManualClock(), manual=True,
         serving=ServingConfig(max_queued_offline=2, policy="reject-fast"),
     )
     fe = Frontend(rt, clock=rt.now)
@@ -298,7 +298,7 @@ def test_reject_fast_leaves_zero_state():
 def test_online_admission_survives_offline_flood():
     eng = mkengine()
     rt = CoServingRuntime(
-        eng, clock=ManualClock(),
+        eng, clock=ManualClock(), manual=True,
         serving=ServingConfig(
             max_queued_online=4, max_queued_offline=4, policy="reject-fast",
         ),

@@ -63,7 +63,7 @@ def test_online_arrival_aborts_offline_batch_at_safepoint():
     ref_eng.run()
 
     eng = mkengine()
-    rt = CoServingRuntime(eng, clock=ManualClock(auto_tick=1e-4))
+    rt = CoServingRuntime(eng, clock=ManualClock(auto_tick=1e-4), manual=True)
     reqs = [mkreq(Priority.OFFLINE, 24, 16, s) for s in range(3)]
     for r in reqs:
         eng.submit(r)
@@ -170,7 +170,9 @@ def test_runtime_waits_route_through_injected_sleep():
 
     rt2 = CoServingRuntime(mkengine(), clock=clock2, sleep=fake_sleep2)
     rt2._sched_depths = (1, 0, 0, 0)
-    rt2._thread = threading.Thread(target=lambda: None)
+    # the thread must stay alive through the drain wait: stop() bails out
+    # early once the engine thread is dead (fault-tolerance, DESIGN.md §16)
+    rt2._thread = threading.Thread(target=lambda: _time.sleep(0.2))
     rt2._thread.start()
     n_before = len(sleeps)
     t0 = _time.monotonic()
